@@ -1,0 +1,86 @@
+"""Paper Table 2: abstract generation with retrieved graph contexts.
+
+Citation graph with community-correlated texts; for each held-out query
+node, build a prompt context via SelfNode (title words only), kNN (semantic
+top-k), or RGL-BFS/Dense/Steiner (retrieved subgraphs, query's own text
+excluded), then generate with the extractive backend (offline stand-in for
+GPT-4o-mini / DeepSeek-V3) and score ROUGE-1/2/L against the node's full
+text.  Reproduction target: RGL-* and kNN beat SelfNode; RGL variants are
+competitive with each other (paper's Table 2 pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BruteIndex, ExtractiveGenerator, GraphTokenizer, PipelineConfig,
+    RGLPipeline, Vocab,
+)
+from repro.core.rouge import rouge_corpus
+from repro.core.tokenization import subgraph_texts
+from repro.graph import csr_to_ell, generators
+
+
+def run(n_nodes=3000, n_queries=48, seed=0, budget=12):
+    g = generators.citation_graph(n_nodes, avg_deg=8, seed=seed)
+    ell = csr_to_ell(g)
+    emb = jnp.asarray(g.node_feat)
+    vocab = Vocab.build(g.node_text)
+    tok = GraphTokenizer(vocab, max_len=384, node_budget=24)
+    gen = ExtractiveGenerator(vocab, max_words=24)
+    rng = np.random.default_rng(seed)
+    q_ids = rng.choice(n_nodes, size=n_queries, replace=False)
+    refs = [g.node_text[i] for i in q_ids]
+    titles = [" ".join(g.node_text[i].split()[:5]) for i in q_ids]
+    qe = emb[q_ids]
+    index = BruteIndex.build(emb)
+    rows = []
+
+    def rouge_for(prompt_texts_per_query):
+        ids, mask = tok.batch_linearize(titles, prompt_texts_per_query)
+        outs = gen.generate(ids, mask, 0)
+        return rouge_corpus(outs, refs)
+
+    # SelfNode: only the query title reaches the generator
+    rows.append({"name": "selfnode", **rouge_for([[] for _ in q_ids])})
+
+    # kNN: top-k semantic neighbors' texts (query itself excluded)
+    _, knn_idx = index.search(qe, budget + 1)
+    knn_idx = np.asarray(knn_idx)
+    knn_ctx = []
+    for r, qi in enumerate(q_ids):
+        sel = [int(j) for j in knn_idx[r] if int(j) != int(qi)][:budget]
+        knn_ctx.append([g.node_text[j] for j in sel])
+    rows.append({"name": "knn", **rouge_for(knn_ctx)})
+
+    # RGL strategies via the full pipeline (retrieval -> filter -> texts)
+    for strat in ("bfs", "dense", "steiner"):
+        pipe = RGLPipeline(
+            graph=ell, index=index, node_emb=emb, tokenizer=tok,
+            node_text=g.node_text,
+            config=PipelineConfig(strategy=strat, k_seeds=4, max_hops=3,
+                                  max_nodes=48, filter_budget=budget + 1),
+        )
+        sub, _ = pipe.retrieve(qe)
+        ctxs = subgraph_texts(sub, g.node_text)
+        ctxs = [
+            [t for v, t in zip(np.asarray(sub.nodes[r]), ctx) if v != q_ids[r]][:budget]
+            for r, ctx in enumerate(ctxs)
+        ]
+        rows.append({"name": f"rgl_{strat}", **rouge_for(ctxs)})
+    return rows
+
+
+def main():
+    print("method,rouge1,rouge2,rougeL")
+    rows = run()
+    for r in rows:
+        print(f"{r['name']},{r['rouge1']:.4f},{r['rouge2']:.4f},{r['rougeL']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

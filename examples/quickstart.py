@@ -1,0 +1,49 @@
+"""RGL quickstart: the 5-stage pipeline on a synthetic citation graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (
+    BruteIndex, ExtractiveGenerator, GraphTokenizer, PipelineConfig,
+    RGLPipeline, Vocab,
+)
+from repro.graph import csr_to_ell, generators
+
+
+def main():
+    # 1) data + index (stage 1: indexing)
+    g = generators.citation_graph(2000, avg_deg=8, seed=0)
+    ell = csr_to_ell(g)
+    emb = jnp.asarray(g.node_feat)
+    index = BruteIndex.build(emb)
+
+    # tokenizer + generator (stages 4-5)
+    vocab = Vocab.build(g.node_text)
+    tok = GraphTokenizer(vocab, max_len=384, node_budget=24)
+    gen = ExtractiveGenerator(vocab, max_words=32)
+
+    pipe = RGLPipeline(
+        graph=ell, index=index, node_emb=emb, tokenizer=tok, generator=gen,
+        node_text=g.node_text,
+        config=PipelineConfig(strategy="steiner", k_seeds=4, max_hops=3,
+                              max_nodes=48, filter_budget=16),
+    )
+
+    # a batch of queries = noisy versions of some node embeddings
+    q_ids = [10, 500, 1500]
+    qe = emb[jnp.asarray(q_ids)] + 0.05
+    out = pipe.run(qe, [" ".join(g.node_text[i].split()[:5]) for i in q_ids])
+
+    for r, qi in enumerate(q_ids):
+        print(f"query node {qi}")
+        print(f"  seeds: {out['seeds'][r].tolist()}")
+        kept = int(out['subgraph'].mask[r].sum())
+        print(f"  retrieved subgraph: {kept} nodes (steiner, filtered)")
+        print(f"  generated: {out['outputs'][r][:100]}...")
+    print("\npipeline stages: index -> node retrieval -> graph retrieval "
+          "-> dynamic filter -> tokenize -> generate  [OK]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Architecture registry: --arch <id> resolution + per-shape config adaptation."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (
+    deepseek_7b, deepseek_coder_33b, equiformer_v2, gin_tu, granite_moe_1b,
+    graphcast, grok_1_314b, meshgraphnet, rgl_paper, starcoder2_3b, wide_deep,
+)
+from repro.configs.common import (
+    ArchSpec, ShapeSpec, gnn_inputs, lm_inputs, recsys_inputs,
+)
+
+REGISTRY = {
+    spec.arch_id: spec
+    for spec in [
+        starcoder2_3b.CONFIG, deepseek_7b.CONFIG, deepseek_coder_33b.CONFIG,
+        grok_1_314b.CONFIG, granite_moe_1b.CONFIG,
+        graphcast.CONFIG, meshgraphnet.CONFIG, gin_tu.CONFIG,
+        equiformer_v2.CONFIG, wide_deep.CONFIG,
+    ]
+}
+
+RGL_PAPER = rgl_paper.CONFIG
+
+ARCH_IDS = sorted(REGISTRY)
+
+
+def get_config(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return REGISTRY[arch_id]
+
+
+def effective_model_cfg(spec: ArchSpec, shape: ShapeSpec):
+    """Adapt the published config to the assigned input shape.
+
+    * GNN: d_in/d_out track the shape's feature/target widths (padded to a
+      multiple of 16 so the "model" mesh axis divides the feature dim); the
+      arch's depth/width/equivariance stay fixed — those are what the config
+      pins.
+    * LM: vocab padded to a multiple of 256 (MaxText-style logical vocab
+      padding) so the vocab-sharded embed/head divide over "model".
+    """
+    from repro.configs.common import ceil_to
+
+    cfg = spec.model_cfg
+    if spec.family == "lm":
+        vp = ceil_to(cfg.vocab, 256)
+        if vp != cfg.vocab:
+            cfg = dataclasses.replace(cfg, vocab=vp)
+    elif spec.family == "gnn":
+        p = shape.params
+        d_in = ceil_to(p["d_feat"], 16)
+        repl = dict(d_in=d_in, d_out=p["d_out"])
+        if cfg.arch == "graphcast":
+            repl["n_vars"] = d_in
+            repl["d_out"] = d_in  # graphcast predicts its input stack
+        if shape.name == "molecule":
+            repl["graph_readout"] = cfg.arch != "graphcast"
+        cfg = dataclasses.replace(cfg, **repl)
+    return cfg
+
+
+def input_specs(arch_id: str, shape_name: str, *, abstract: bool = True):
+    """ShapeDtypeStruct stand-ins for every model input of the given cell."""
+    spec = get_config(arch_id)
+    shape = spec.shapes[shape_name]
+    if shape.kind == "skip":
+        raise ValueError(
+            f"{arch_id} x {shape_name} is a documented skip: {shape.params['reason']}"
+        )
+    cfg = effective_model_cfg(spec, shape)
+    builder = {"lm": lm_inputs, "gnn": gnn_inputs, "recsys": recsys_inputs}[spec.family]
+    return builder(shape, cfg, abstract=abstract)
+
+
+__all__ = [
+    "REGISTRY", "ARCH_IDS", "RGL_PAPER", "get_config", "effective_model_cfg",
+    "input_specs",
+]

@@ -1,0 +1,231 @@
+"""Config framework: ArchSpec + per-family input builders.
+
+Every assigned architecture registers an ArchSpec carrying its exact
+published configuration, its shape set, a `reduced()` smoke config, and
+builders that yield either ShapeDtypeStructs (dry-run: no allocation) or
+real arrays (smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode | long_decode | infer | retrieval
+    params: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str  # lm | gnn | recsys
+    model_cfg: object
+    shapes: dict
+    reduced_cfg: object  # tiny same-family config for CPU smoke tests
+    source: str  # citation tag from the assignment
+    notes: str = ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def ceil_to(x: int, m: int) -> int:
+    return -(-int(x) // m) * m
+
+
+EDGE_CHUNK = 16384  # equiformer edge-scan chunk; edge padding unit for big E
+
+
+def padded_edges(shape: "ShapeSpec") -> int:
+    """Edge-array length after sharding/chunk-friendly padding (mask-safe)."""
+    p = shape.params
+    if shape.name == "minibatch_lg":
+        e = p["block_edges"]
+    elif shape.name == "molecule":
+        e = p["n_edges"] * p["batch"] * 2
+    else:
+        e = p["n_edges"]
+    return ceil_to(e, EDGE_CHUNK if e > EDGE_CHUNK else 512)
+
+
+def lm_shapes(*, sliding_window: Optional[int] = None) -> dict:
+    """The 4 assigned LM shapes.  long_500k only for sub-quadratic archs."""
+    shapes = {
+        "train_4k": ShapeSpec("train_4k", "train",
+                              dict(seq_len=4096, global_batch=256)),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                                 dict(seq_len=32768, global_batch=32)),
+        "decode_32k": ShapeSpec("decode_32k", "decode",
+                                dict(seq_len=32768, global_batch=128)),
+    }
+    if sliding_window is not None:
+        shapes["long_500k"] = ShapeSpec(
+            "long_500k", "long_decode",
+            dict(seq_len=524288, global_batch=1, cache_len=sliding_window),
+        )
+    else:
+        shapes["long_500k"] = ShapeSpec(
+            "long_500k", "skip",
+            dict(reason="pure full-attention arch; sub-quadratic attention "
+                        "required at 524k context (DESIGN.md §4)"),
+        )
+    return shapes
+
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec(
+        "full_graph_sm", "train",
+        dict(n_nodes=2708, n_edges=10556, d_feat=1433, d_out=40),
+    ),
+    "minibatch_lg": ShapeSpec(
+        "minibatch_lg", "train",
+        dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+             fanout=(15, 10), d_feat=602, d_out=41,
+             # sampled-block static shapes:
+             block_nodes=1024 + 1024 * 15 + 1024 * 150,
+             block_edges=1024 * 15 + 1024 * 150),
+    ),
+    "ogb_products": ShapeSpec(
+        "ogb_products", "train",
+        dict(n_nodes=2449029, n_edges=61859140, d_feat=100, d_out=47),
+    ),
+    "molecule": ShapeSpec(
+        "molecule", "train",
+        dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, d_out=4),
+    ),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", dict(batch=65536)),
+    "serve_p99": ShapeSpec("serve_p99", "infer", dict(batch=512)),
+    "serve_bulk": ShapeSpec("serve_bulk", "infer", dict(batch=262144)),
+    "retrieval_cand": ShapeSpec(
+        "retrieval_cand", "retrieval", dict(batch=1, n_candidates=1_000_000, k=100)
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# input builders (abstract=True -> ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+def lm_inputs(shape: ShapeSpec, cfg, *, abstract: bool = True):
+    p = shape.params
+    if shape.kind == "train":
+        b, s = p["global_batch"], p["seq_len"]
+        out = {
+            "tokens": sds((b, s), jnp.int32),
+            "loss_mask": sds((b, s), jnp.bool_),
+        }
+    elif shape.kind == "prefill":
+        b, s = p["global_batch"], p["seq_len"]
+        out = {
+            "tokens": sds((b, s), jnp.int32),
+            "true_len": sds((b,), jnp.int32),
+        }
+    elif shape.kind in ("decode", "long_decode"):
+        b = p["global_batch"]
+        sc = p.get("cache_len", p["seq_len"])
+        L, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+        cache_dt = jnp.int8 if cfg.kv_quant else jnp.dtype(cfg.dtype)
+        out = {
+            "token": sds((b,), jnp.int32),
+            "cache_k": sds((L, b, sc, kv, dh), cache_dt),
+            "cache_v": sds((L, b, sc, kv, dh), cache_dt),
+            "cache_pos": sds((b, sc), jnp.int32),
+            "cursor": sds((b,), jnp.int32),
+        }
+        if cfg.kv_quant:
+            out["k_scale"] = sds((L, b, sc, kv), jnp.bfloat16)
+            out["v_scale"] = sds((L, b, sc, kv), jnp.bfloat16)
+    else:
+        raise ValueError(shape.kind)
+    if abstract:
+        return out
+    rng = np.random.default_rng(0)
+    return concretize(out, rng, vocab=cfg.vocab)
+
+
+def gnn_inputs(shape: ShapeSpec, cfg, *, abstract: bool = True):
+    p = shape.params
+    if shape.name == "minibatch_lg":
+        n = p["block_nodes"]
+    elif shape.name == "molecule":
+        n = p["n_nodes"] * p["batch"]
+    else:
+        n = p["n_nodes"]
+    e = padded_edges(shape)
+    d_in = cfg.d_in
+    out = {
+        "node_feat": sds((n, d_in), jnp.float32),
+        "edge_src": sds((e,), jnp.int32),
+        "edge_dst": sds((e,), jnp.int32),
+        "edge_mask": sds((e,), jnp.bool_),
+    }
+    if cfg.arch == "equiformer_v2":
+        out["pos"] = sds((n, 3), jnp.float32)
+        out["wigner_lut"] = sds(
+            (cfg.n_wigner_bins, cfg.sphere_k, cfg.sphere_k), jnp.float32
+        )
+    if shape.name == "molecule" and cfg.graph_readout:
+        out["targets"] = sds((p["batch"], cfg.d_out), jnp.float32)
+        out["graph_ids"] = sds((n,), jnp.int32)
+    else:
+        out["targets"] = sds((n, cfg.d_out), jnp.float32)
+        out["node_mask"] = sds((n,), jnp.float32)
+    if abstract:
+        return out
+    return concretize(out, np.random.default_rng(0), n_nodes=n)
+
+
+def recsys_inputs(shape: ShapeSpec, cfg, *, abstract: bool = True):
+    p = shape.params
+    if shape.kind == "retrieval":
+        out = {
+            "query": sds((p["batch"], cfg.mlp[-1]), jnp.float32),
+            "cand_emb": sds((p["n_candidates"], cfg.mlp[-1]), jnp.float32),
+        }
+    else:
+        b = p["batch"]
+        out = {
+            "dense": sds((b, cfg.n_dense), jnp.float32),
+            "sparse_ids": sds((b, cfg.n_sparse, cfg.bag_size), jnp.int32),
+        }
+        if shape.kind == "train":
+            out["labels"] = sds((b,), jnp.float32)
+    if abstract:
+        return out
+    return concretize(out, np.random.default_rng(0), vocab=cfg.rows_per_field)
+
+
+def concretize(tree, rng, *, vocab: int = 64, n_nodes: int = 8):
+    """Fill a ShapeDtypeStruct tree with small random arrays (smoke tests)."""
+
+    def fill(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if x.dtype == jnp.bool_:
+            return jnp.ones(x.shape, bool)
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            if "edge" in name or name in ("graph_ids",):
+                hi = max(n_nodes, 2)
+            elif name in ("token", "tokens"):
+                hi = vocab
+            elif name == "sparse_ids":
+                hi = vocab
+            elif name in ("cache_pos",):
+                return jnp.full(x.shape, -1, jnp.int32)
+            elif name in ("cursor", "true_len"):
+                return jnp.full(x.shape, 1, jnp.int32)
+            else:
+                hi = 2
+            return jnp.asarray(rng.integers(0, hi, x.shape), x.dtype)
+        return jnp.asarray(rng.standard_normal(x.shape) * 0.1, x.dtype)
+
+    return jax.tree_util.tree_map_with_path(fill, tree)

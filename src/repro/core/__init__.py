@@ -1,0 +1,25 @@
+"""RGL core: the paper's contribution — the 5-stage RAG-on-Graphs pipeline."""
+from repro.core.pipeline import RGLPipeline, PipelineConfig
+from repro.core.graph_retrieval import (
+    Subgraph,
+    bfs_subgraph,
+    dense_subgraph,
+    steiner_subgraph,
+    retrieve_subgraph,
+    bfs_distances,
+    induced_adjacency,
+)
+from repro.core.indexing import BruteIndex, IVFIndex, build_index
+from repro.core.filters import dynamic_filter, similarity_scores
+from repro.core.tokenization import Vocab, GraphTokenizer
+from repro.core.generation import ExtractiveGenerator, make_lm_generator
+
+__all__ = [
+    "RGLPipeline", "PipelineConfig", "Subgraph",
+    "bfs_subgraph", "dense_subgraph", "steiner_subgraph", "retrieve_subgraph",
+    "bfs_distances", "induced_adjacency",
+    "BruteIndex", "IVFIndex", "build_index",
+    "dynamic_filter", "similarity_scores",
+    "Vocab", "GraphTokenizer",
+    "ExtractiveGenerator", "make_lm_generator",
+]

@@ -1,0 +1,53 @@
+"""Dynamic node filtering (paper §1/§2: cut token consumption pre-generation).
+
+Filters operate on a retrieved :class:`Subgraph` and a per-node relevance
+score, reducing the node budget while always preserving the seed terminals.
+Fixed shapes: filtering = reordering + masking, never reshaping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_retrieval import Subgraph, INF
+
+
+@functools.partial(jax.jit, static_argnames=("budget",))
+def dynamic_filter(
+    sub: Subgraph,
+    node_scores: jnp.ndarray,  # (N,) or (Q, N) relevance (higher = keep)
+    seeds: jnp.ndarray,  # (Q, S)
+    *,
+    budget: int,
+) -> Subgraph:
+    """Keep the ``budget`` highest-scoring retrieved nodes (+ all seeds)."""
+    q, m = sub.nodes.shape
+    n = sub.num_nodes
+    if node_scores.ndim == 1:
+        node_scores = jnp.broadcast_to(node_scores[None], (q, n))
+    safe = jnp.minimum(sub.nodes, n - 1)
+    s = jnp.take_along_axis(node_scores, safe, axis=1)  # (Q, M)
+    is_seed = (sub.nodes[:, :, None] == seeds[:, None, :]).any(-1) & sub.mask
+    s = jnp.where(is_seed, jnp.inf, s)  # seeds always survive
+    s = jnp.where(sub.mask, s, -jnp.inf)
+    budget = min(budget, m)
+    top_s, pos = jax.lax.top_k(s, budget)
+    nodes = jnp.take_along_axis(sub.nodes, pos, axis=1)
+    mask = top_s > -jnp.inf
+    dist = jnp.take_along_axis(sub.dist, pos, axis=1)
+    return Subgraph(
+        nodes=jnp.where(mask, nodes, n),
+        mask=mask,
+        dist=jnp.where(mask, dist, INF),
+        num_nodes=n,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def similarity_scores(node_emb: jnp.ndarray, query_emb: jnp.ndarray) -> jnp.ndarray:
+    """(N, D) x (Q, D) -> (Q, N) cosine relevance for dynamic filtering."""
+    ne = node_emb / (jnp.linalg.norm(node_emb, axis=-1, keepdims=True) + 1e-6)
+    qe = query_emb / (jnp.linalg.norm(query_emb, axis=-1, keepdims=True) + 1e-6)
+    return qe @ ne.T

@@ -1,0 +1,67 @@
+"""Stage 5 of the RGL pipeline: generation interface (paper §2.1.4).
+
+The paper calls hosted LLMs (GPT-4o-mini / DeepSeek-V3); offline here, the
+interface targets the in-repo LM stack instead.  Two backends:
+
+* :class:`ExtractiveGenerator` — LM-free summarizer (budgeted extraction from
+  the retrieved context, retrieval-priority order).  Deterministic; used as
+  the cheap default in benchmarks.
+* :class:`LMGenerator` — any of the 5 assigned LM architectures, greedy or
+  temperature sampling through the serving path (prefill + KV-cache decode).
+  Constructed in ``repro.models.transformer.generate`` to avoid circular
+  imports; registered here via :func:`register_lm_generator`.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import numpy as np
+
+
+class Generator(Protocol):
+    def generate(self, prompt_ids: np.ndarray, prompt_mask: np.ndarray,
+                 max_new_tokens: int) -> list:  # -> list[str]
+        ...
+
+
+class ExtractiveGenerator:
+    """Budgeted extraction: emit context tokens in retrieval-priority order.
+
+    A strong cheap baseline for abstract generation — ROUGE against the true
+    abstract rewards overlapping content words, which retrieved neighborhood
+    text supplies (the same effect the paper gets from prompting an LLM with
+    the retrieved context)."""
+
+    def __init__(self, vocab, max_words: int = 48):
+        self.vocab = vocab
+        self.max_words = max_words
+        self.id_to_word = {v + 6: k for k, v in vocab.word_to_id.items()}
+
+    def generate(self, prompt_ids, prompt_mask, max_new_tokens: int = 0) -> list:
+        out = []
+        budget = self.max_words if max_new_tokens == 0 else max_new_tokens
+        for ids, m in zip(np.asarray(prompt_ids), np.asarray(prompt_mask)):
+            words = [self.id_to_word[int(t)] for t in ids[m] if int(t) in self.id_to_word]
+            seen, uniq = set(), []
+            for w in words:
+                if w not in seen:
+                    seen.add(w)
+                    uniq.append(w)
+            out.append(" ".join(uniq[:budget]))
+        return out
+
+
+_LM_GENERATOR_FACTORY = None
+
+
+def register_lm_generator(factory) -> None:
+    global _LM_GENERATOR_FACTORY
+    _LM_GENERATOR_FACTORY = factory
+
+
+def make_lm_generator(*args, **kw):
+    if _LM_GENERATOR_FACTORY is None:
+        from repro.models.transformer import generate as _g  # lazy wiring
+
+        register_lm_generator(_g.LMGenerator)
+    return _LM_GENERATOR_FACTORY(*args, **kw)

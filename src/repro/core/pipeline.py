@@ -1,0 +1,87 @@
+"""The end-to-end RGL pipeline (paper Fig. 1): index -> node retrieval ->
+graph retrieval -> dynamic filtering -> tokenization -> generation.
+
+``RGLPipeline`` is the OOP API; every stage is also exposed as a composable
+function (the paper's Functional API) in its own module, so applications can
+re-wire stages (e.g. modality completion stops after ``retrieve``)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filters, graph_retrieval, node_retrieval, tokenization
+from repro.core.graph_retrieval import Subgraph
+from repro.graph.ell import ELLGraph
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    strategy: str = "bfs"  # bfs | dense | steiner
+    k_seeds: int = 4
+    max_hops: int = 3
+    max_nodes: int = 64
+    filter_budget: int = 32  # dynamic node filter budget (<= max_nodes)
+    max_prompt_len: int = 512
+    node_token_budget: int = 48
+
+
+@dataclasses.dataclass
+class RGLPipeline:
+    graph: ELLGraph
+    index: object  # BruteIndex | IVFIndex
+    node_emb: jnp.ndarray  # (N, D) embeddings used for filtering scores
+    tokenizer: Optional[tokenization.GraphTokenizer] = None
+    generator: Optional[object] = None
+    node_text: Optional[list] = None
+    config: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
+
+    # ---- functional stages --------------------------------------------------
+    def retrieve_seeds(self, query_emb, encoder=None):
+        return node_retrieval.retrieve_nodes(
+            self.index, query_emb, self.config.k_seeds, encoder=encoder
+        )
+
+    def retrieve_subgraph(self, seeds) -> Subgraph:
+        return graph_retrieval.retrieve_subgraph(
+            self.graph,
+            seeds,
+            self.config.strategy,
+            max_hops=self.config.max_hops,
+            max_nodes=self.config.max_nodes,
+        )
+
+    def filter(self, sub: Subgraph, query_emb, seeds) -> Subgraph:
+        scores = filters.similarity_scores(self.node_emb, jnp.asarray(query_emb))
+        return filters.dynamic_filter(
+            sub, scores, jnp.asarray(seeds), budget=self.config.filter_budget
+        )
+
+    def retrieve(self, query_emb, encoder=None) -> tuple[Subgraph, jnp.ndarray]:
+        """Stages 2+3+filter — the sub-pipeline completion tasks use."""
+        _, seeds = self.retrieve_seeds(query_emb, encoder=encoder)
+        sub = self.retrieve_subgraph(seeds)
+        sub = self.filter(sub, query_emb, seeds)
+        return sub, seeds
+
+    def tokenize(self, query_texts, sub: Subgraph):
+        assert self.tokenizer is not None and self.node_text is not None
+        texts = tokenization.subgraph_texts(sub, self.node_text)
+        return self.tokenizer.batch_linearize(query_texts, texts)
+
+    # ---- OOP API ------------------------------------------------------------
+    def run(self, query_emb, query_texts, max_new_tokens: int = 0) -> dict:
+        sub, seeds = self.retrieve(query_emb)
+        ids, mask = self.tokenize(query_texts, sub)
+        outputs = None
+        if self.generator is not None:
+            outputs = self.generator.generate(ids, mask, max_new_tokens)
+        return {
+            "seeds": np.asarray(seeds),
+            "subgraph": sub,
+            "prompt_ids": ids,
+            "prompt_mask": mask,
+            "outputs": outputs,
+        }

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    TokenDataset, rag_token_stream, host_shard_iter, synthetic_corpus,
+)
+
+__all__ = [
+    "TokenDataset", "rag_token_stream", "host_shard_iter", "synthetic_corpus",
+]

@@ -1,0 +1,93 @@
+"""Data pipeline: synthetic corpora, RAG-augmented token streams, host sharding.
+
+The paper's abstract-generation task maps to: for each query node, retrieve
+a subgraph, linearize (tokenization stage), and train the LM to produce the
+node's own text given the retrieved context — `rag_token_stream` builds
+exactly that stream, batched through the (jit) retrieval pipeline, so RAG
+retrieval is *in the training data path* (the paper's Fig. 2 scenario where
+retrieval time stacks on learning time).
+
+`host_shard_iter` does deterministic host sharding + elastic re-assignment
+(rendezvous hashing from distributed.fault) for the multi-host posture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.distributed.fault import elastic_shard_assignment
+
+
+def synthetic_corpus(n_docs: int = 1000, seed: int = 0, length: int = 32) -> list:
+    from repro.graph.generators import _texts
+
+    rng = np.random.default_rng(seed)
+    return _texts(rng, n_docs, length)
+
+
+@dataclasses.dataclass
+class TokenDataset:
+    """Fixed-length LM samples from a list of token id sequences."""
+
+    ids: np.ndarray  # (n, L) int32
+    mask: np.ndarray  # (n, L) bool
+
+    @staticmethod
+    def from_texts(texts, vocab, max_len: int = 128) -> "TokenDataset":
+        ids = np.zeros((len(texts), max_len), np.int32)
+        mask = np.zeros((len(texts), max_len), bool)
+        for i, t in enumerate(texts):
+            enc = [1] + [vocab.encode_word(w) for w in t.lower().split()][: max_len - 1]
+            ids[i, : len(enc)] = enc
+            mask[i, : len(enc)] = True
+        return TokenDataset(ids=ids, mask=mask)
+
+    def batches(self, batch: int, seed: int = 0, shard: tuple = (0, 1)) -> Iterator:
+        """Infinite shuffled batches; (shard_id, n_shards) host sharding."""
+        rng = np.random.default_rng(seed)
+        sid, ns = shard
+        idx = np.arange(len(self.ids))
+        idx = idx[idx % ns == sid]
+        while True:
+            order = rng.permutation(idx)
+            for s in range(0, len(order) - batch + 1, batch):
+                sel = order[s : s + batch]
+                yield {"tokens": self.ids[sel], "loss_mask": self.mask[sel]}
+
+
+def rag_token_stream(
+    pipeline, query_texts: list, query_emb, target_texts: list,
+    batch: int = 8, max_len: int = 256, seed: int = 0,
+) -> Iterator:
+    """RAG-augmented LM batches: prompt = linearized retrieved subgraph,
+    loss only on the target continuation (prompt tokens are context)."""
+    rng = np.random.default_rng(seed)
+    n = len(query_texts)
+    tok = pipeline.tokenizer
+    while True:
+        sel = rng.integers(0, n, size=batch)
+        qe = query_emb[sel]
+        sub, _ = pipeline.retrieve(qe)
+        from repro.core.tokenization import subgraph_texts
+
+        node_texts = subgraph_texts(sub, pipeline.node_text)
+        ids = np.zeros((batch, max_len), np.int32)
+        lmask = np.zeros((batch, max_len), bool)
+        for i, qi in enumerate(sel):
+            p_ids, p_mask = tok.linearize(query_texts[qi], node_texts[i])
+            plen = int(p_mask.sum())
+            tgt = [tok.vocab.encode_word(w) for w in target_texts[qi].lower().split()]
+            room = max_len - plen
+            tgt = tgt[:room]
+            ids[i, :plen] = p_ids[:plen]
+            ids[i, plen : plen + len(tgt)] = tgt
+            lmask[i, max(plen - 1, 0) : plen + len(tgt) - 1] = True  # predict target
+        yield {"tokens": ids, "loss_mask": lmask}
+
+
+def host_shard_iter(files: list, host: int, hosts: list) -> list:
+    """Files this host owns under the current elastic assignment."""
+    assign = elastic_shard_assignment(len(files), hosts)
+    return [f for i, f in enumerate(files) if assign[i] == host]

@@ -1,0 +1,43 @@
+"""Sharding hints usable from model code without threading a mesh through.
+
+`shard_hint(x, *axes)` applies `with_sharding_constraint` when a mesh
+context is active (the dry-run / launcher path) and is a no-op otherwise
+(CPU tests, single device).  Axis entries: None, a mesh axis name, or the
+logical "dp" which resolves to ("pod", "data") as available.
+
+These hints are the §Perf memory-term fixes: without them GSPMD replicated
+the big per-graph / per-cache intermediates (measured: equiformer x
+ogb_products at 50 TiB/device; EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def shard_hint(x, *axes):
+    m = _active_mesh()
+    if m is None:
+        return x
+    resolved = []
+    for a in axes:
+        if a == "dp":
+            dp = tuple(ax for ax in ("pod", "data") if ax in m.axis_names)
+            resolved.append(dp if dp else None)
+        elif a is None or a in m.axis_names:
+            resolved.append(a)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*resolved))
+    )

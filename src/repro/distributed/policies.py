@@ -1,0 +1,198 @@
+"""Sharding policies per model family (DESIGN.md §5).
+
+Maps parameter-pytree paths and step inputs to PartitionSpecs for the
+production meshes: (16, 16) ("data", "model") single-pod and (2, 16, 16)
+("pod", "data", "model") multi-pod.
+
+LM policy (dense): 2D weight sharding — FSDP over "data" on the contracting
+dim + Megatron TP over "model" on heads/d_ff; activations sharded batch x
+("pod","data") and model-dim where contracted.  Weights are replicated
+across pods (hierarchical DP: reduce-scatter in-pod, all-reduce cross-pod —
+GSPMD derives this from the specs).
+
+LM policy (MoE): "expert" mode shards the E axis over "model" (EP;
+dispatch lowers to all-to-all) for E >= 16 (granite 32e); "tp" mode shards
+each expert's d_ff over "model" (grok 8e < 16 devices).
+
+GNN policy: edge-parallel — edge arrays over DP axes, node feature dim over
+"model" (row gathers stay shard-local; feature-contracting MLPs psum).
+
+RecSys policy: embedding tables row-sharded over "model" (lookup lowers to
+all-to-all), MLP replicated, batch over DP axes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel mesh axes: ("pod","data") when a pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    return P(dp_axes(mesh), *([None] * extra_dims))
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_axes_or_none(mesh: Mesh, batch: int):
+    """DP axes if they divide the global batch, else replicate (b=1 decode)."""
+    return dp_axes(mesh) if batch % dp_size(mesh) == 0 else None
+
+
+# --------------------------------------------------------------------------
+# LM transformer
+# --------------------------------------------------------------------------
+def lm_param_spec(path: str, shape, moe_mode: str = "expert") -> P:
+    """path: '/'-joined param path, e.g. 'layers/wq'."""
+    leaf = path.split("/")[-1]
+    if leaf in ("ln1", "ln2", "ln_f"):
+        return P()  # tiny
+    if leaf == "embed":
+        return P(None, "model")
+    if leaf == "head":
+        return P(None, "model")
+    # MoE expert weights (L, E, D, F) / (L, E, F, D) — match BEFORE the
+    # generic w1/w2/w3 rules (same leaf names, different ranks).
+    if "moe" in path.split("/"):
+        if leaf in ("w1", "w3"):
+            return P(None, "model", "data", None) if moe_mode == "expert" else P(
+                None, None, "data", "model"
+            )
+        if leaf == "w2":
+            return P(None, "model", None, "data") if moe_mode == "expert" else P(
+                None, None, "model", "data"
+            )
+        return P()
+    if leaf in ("wq", "wk", "wv", "w1", "w3"):
+        return P(None, "data", "model")  # (L, D, out)
+    if leaf in ("wo", "w2"):
+        return P(None, "model", "data")  # (L, in, D)
+    if leaf == "router":
+        return P()
+    return P()
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def lm_param_specs(param_shapes, moe_mode: str = "expert"):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: lm_param_spec(_path_str(kp), x, moe_mode), param_shapes
+    )
+
+
+def lm_input_specs(mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {
+        "tokens": P(dp, None),
+        "loss_mask": P(dp, None),
+    }
+
+
+def lm_cache_specs(mesh: Mesh, batch: int, kv_heads: int,
+                   kv_shard: str = "seq") -> dict:
+    """KV-cache sharding.  Baseline "seq": shard the cache length over
+    "model" (flash-decoding style — works for every arch since cache_len is
+    always a multiple of 16; softmax stats psum over shards).  "heads" mode
+    shards KV heads instead (only when kv_heads % model_size == 0) — a
+    hillclimb option for deepseek-7b (kv=32).  Batch dims replicate when the
+    global batch doesn't divide the DP axes (long_500k: batch=1)."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b = dp if batch % dp_size == 0 else None
+    if kv_shard == "heads":
+        return {
+            "k": P(None, b, None, "model", None),
+            "v": P(None, b, None, "model", None),
+            "pos": P(b, None),
+            "cursor": P(b),
+        }
+    return {
+        "k": P(None, b, "model", None, None),
+        "v": P(None, b, "model", None, None),
+        "pos": P(b, "model"),
+        "cursor": P(b),
+    }
+
+
+# --------------------------------------------------------------------------
+# GNN
+# --------------------------------------------------------------------------
+def gnn_param_specs(param_shapes):
+    """GNN params are small (<= 50M); feature-dim shard the big MLP mats,
+    replicate the rest."""
+
+    def spec(kp, x):
+        if len(x.shape) == 2 and x.shape[0] * x.shape[1] >= 1 << 20:
+            return P(None, "model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, param_shapes)
+
+
+def gnn_input_specs(mesh: Mesh, keys) -> dict:
+    dp = dp_axes(mesh)
+    table = {
+        "node_feat": P(None, "model"),
+        "pos": P(),
+        "edge_src": P(dp),
+        "edge_dst": P(dp),
+        "edge_mask": P(dp),
+        "edge_feat": P(dp, None),
+        "targets": P(),
+        "node_mask": P(),
+        "graph_ids": P(),
+        "wigner_lut": P(),
+    }
+    return {k: table[k] for k in keys}
+
+
+# --------------------------------------------------------------------------
+# RecSys
+# --------------------------------------------------------------------------
+def recsys_param_specs(param_shapes):
+    def spec(kp, x):
+        path = _path_str(kp)
+        if path.endswith("table"):
+            return P("model", None)
+        if path.endswith("wide"):
+            return P("model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, param_shapes)
+
+
+def recsys_input_specs(mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    return {
+        "dense": P(dp, None),
+        "sparse_ids": P(dp, None, None),
+        "labels": P(dp),
+        "query": P(),
+        "cand_emb": P("model", None),
+    }
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,20 @@
+"""Graph substrate: static-shape graph containers and host-side tooling.
+
+Device-side code (retrieval, GNNs) consumes :class:`ELLGraph` — a padded
+neighbor-list format with a sentinel row so gathers stay in-bounds.  Host-side
+code (samplers, generators, converters) goes through :class:`CSRGraph`.
+"""
+from repro.graph.csr import CSRGraph
+from repro.graph.ell import ELLGraph, csr_to_ell
+from repro.graph.batch import batch_graphs
+from repro.graph.sampler import NeighborSampler
+from repro.graph import generators
+
+__all__ = [
+    "CSRGraph",
+    "ELLGraph",
+    "csr_to_ell",
+    "batch_graphs",
+    "NeighborSampler",
+    "generators",
+]

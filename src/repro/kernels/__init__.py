@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True).
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper with padding + fallback) and ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+"""
+from repro.kernels import topk_sim, ell_spmm, flash_attn, bfs_frontier  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.bfs_frontier import ops, ref  # noqa: F401

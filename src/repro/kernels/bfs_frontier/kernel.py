@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: one pull-BFS frontier expansion hop.
+
+The inner loop of the paper's graph retrieval (Fig. 2's hot path).  The
+frontier is a per-query bitmap row (N+1 int8, VMEM-resident: 256k nodes =
+256 KB) and the adjacency streams through in (BLK_N, K) node tiles:
+
+  grid = (Q, N / BLK_N); per cell:
+    frontier row (1, N+1) int8     — indexed by query only (stays resident)
+    nbr tile     (BLK_N, K) int32
+    out tile     (1, BLK_N) int8   = OR_k frontier[nbr[:, k]]
+
+The K-slot loop is unrolled row-gathers within VMEM, identical in shape to
+the ell_spmm kernel but with boolean max-accumulate — the paper's "batch
+the traversal" insight expressed as fixed-shape tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hop_kernel(f_ref, nbr_ref, msk_ref, o_ref, *, k_slots: int):
+    f = f_ref[0]  # (N+1,) int8
+    idx = nbr_ref[...]  # (BLK_N, K)
+    msk = msk_ref[...]  # (BLK_N, K)
+    acc = jnp.zeros((idx.shape[0],), jnp.int8)
+    for kk in range(k_slots):
+        hit = f[idx[:, kk]]  # (BLK_N,) int8 gather within VMEM
+        acc = jnp.maximum(acc, jnp.where(msk[:, kk], hit, 0))
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "interpret"))
+def frontier_hop_kernel(
+    frontier: jnp.ndarray,  # (Q, N+1) int8 (slot N = 0 sentinel)
+    nbr: jnp.ndarray,  # (N, K) int32 sentinel N
+    nbr_mask: jnp.ndarray,  # (N, K) bool
+    *,
+    blk_n: int = 512,
+    interpret: bool = False,
+):
+    q, n1 = frontier.shape
+    n, k = nbr.shape
+    assert n1 == n + 1 and n % blk_n == 0, (n1, n, blk_n)
+    kern = functools.partial(_hop_kernel, k_slots=k)
+    return pl.pallas_call(
+        kern,
+        grid=(q, n // blk_n),
+        in_specs=[
+            pl.BlockSpec((1, n1), lambda b, i: (b, 0)),
+            pl.BlockSpec((blk_n, k), lambda b, i: (i, 0)),
+            pl.BlockSpec((blk_n, k), lambda b, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_n), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.int8),
+        interpret=interpret,
+    )(frontier, nbr, nbr_mask)

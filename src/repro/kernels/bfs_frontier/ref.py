@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: one batched pull-BFS frontier hop."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def frontier_hop(frontier, nbr, nbr_mask):
+    """frontier (Q, N) bool; nbr (N, K) sentinel N; -> reach (Q, N) bool:
+    reach[q, v] = OR_k frontier[q, nbr[v, k]] & nbr_mask[v, k]."""
+    q = frontier.shape[0]
+    fp = jnp.concatenate([frontier, jnp.zeros((q, 1), bool)], axis=1)
+    g = fp[:, nbr]  # (Q, N, K)
+    return jnp.any(g & nbr_mask[None], axis=-1)

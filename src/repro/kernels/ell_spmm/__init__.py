@@ -1,0 +1,1 @@
+from repro.kernels.ell_spmm import ops, ref  # noqa: F401

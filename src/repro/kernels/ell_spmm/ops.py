@@ -1,0 +1,44 @@
+"""Public wrapper: padding + sentinel handling + interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_spmm import ref
+from repro.kernels.ell_spmm.kernel import ell_aggregate_kernel
+
+_VMEM_BUDGET = 4 * 1024 * 1024  # bytes for the resident feature tile
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("blk_m", "use_kernel"))
+def ell_aggregate(
+    feat: jnp.ndarray,  # (Q, M, D)
+    nbr: jnp.ndarray,  # (Q, M, K), sentinel M
+    nbr_mask: jnp.ndarray,
+    *,
+    blk_m: int = 128,
+    use_kernel: bool | None = None,
+):
+    q, m, d = feat.shape
+    if use_kernel is None:
+        use_kernel = (m + 1) * d * 4 <= _VMEM_BUDGET
+    if not use_kernel:
+        return ref.ell_aggregate(feat, nbr, nbr_mask)
+    blk = min(blk_m, m)
+    mp = -(-m // blk) * blk
+    fpad = jnp.zeros((q, mp + 1, d), feat.dtype).at[:, :m].set(feat)
+    npad = jnp.full((q, mp, nbr.shape[2]), mp, jnp.int32)
+    npad = npad.at[:, :m].set(jnp.where(nbr_mask, nbr, mp).astype(jnp.int32))
+    # remap original sentinel M -> padded sentinel MP
+    npad = jnp.where(npad == m, mp, npad)
+    mpad = jnp.zeros((q, mp, nbr.shape[2]), bool).at[:, :m].set(nbr_mask)
+    out = ell_aggregate_kernel(
+        fpad, npad, mpad, blk_m=blk, interpret=not _on_tpu()
+    )
+    return out[:, :m]

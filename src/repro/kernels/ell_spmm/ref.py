@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: batched ELL neighbor aggregation (subgraph encoding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_aggregate(feat, nbr, nbr_mask):
+    """feat (Q, M, D); nbr (Q, M, K) positions into [0, M] (sentinel M);
+    nbr_mask (Q, M, K).  out[q, i] = sum_k mask[q,i,k] * feat[q, nbr[q,i,k]]."""
+    q, m, d = feat.shape
+
+    def per_query(f, idx, msk):
+        fp = jnp.concatenate([f, jnp.zeros((1, d), f.dtype)], axis=0)  # (M+1, D)
+        g = fp[jnp.minimum(idx, m)]  # (M, K, D)
+        return jnp.sum(jnp.where(msk[..., None], g, 0.0), axis=1)
+
+    return jax.vmap(per_query)(feat, nbr, nbr_mask)

@@ -1,0 +1,102 @@
+"""Pallas TPU flash attention (FlashAttention-2 schedule), causal + window.
+
+Grid: (batch*kv_head*rep, n_q_blocks, n_kv_blocks) — the kv axis is the
+innermost (sequential on TPU), so online-softmax accumulators live in VMEM
+scratch across kv steps and the output tile is written once, at the last kv
+block.  Blocks are (BLK_Q, dh) x (BLK_K, dh) with dh a lane multiple (128);
+the MXU sees (BLK_Q, dh) @ (dh, BLK_K).
+
+Sliding-window masking composes with causal masking per tile; fully-masked
+tiles still run (correct, suboptimal) — grid pruning is a recorded §Perf
+candidate rather than baked-in complexity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, blk_q: int, blk_k: int, n_k: int, scale: float, window,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (BLK_Q, dh)
+    k = k_ref[0]  # (BLK_K, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BLK_Q, BLK_K)
+    iq = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    jk = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jk <= iq
+    if window is not None:
+        mask &= (iq - jk) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("blk_q", "blk_k", "window", "interpret")
+)
+def flash_mha(
+    q: jnp.ndarray,  # (BH, S, dh) query heads flattened
+    k: jnp.ndarray,  # (BH, S, dh) kv repeated to query-head count
+    v: jnp.ndarray,
+    *,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    window=None,
+    interpret: bool = False,
+):
+    bh, s, dh = q.shape
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+    n_q, n_k = s // blk_q, s // blk_k
+    kern = functools.partial(
+        _flash_kernel, blk_q=blk_q, blk_k=blk_k, n_k=n_k,
+        scale=dh**-0.5, window=window,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

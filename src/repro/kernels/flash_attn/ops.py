@@ -1,0 +1,37 @@
+"""Public wrapper: GQA layout handling, padding, CPU interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_mha
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "q_blk", "kv_blk"))
+def flash_attention(q, k, v, *, window=None, q_blk: int = 128, kv_blk: int = 128):
+    """q (B,S,H,dh), k/v (B,S,KV,dh) — causal flash attention, GQA-aware.
+
+    KV heads are logically repeated to the query-head count; XLA keeps the
+    repeat as a broadcast (no HBM copy) because it feeds a reshape-transpose.
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    qf = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    kf = jnp.transpose(kr, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    vf = jnp.transpose(vr, (0, 2, 1, 3)).reshape(b * h, s, dh)
+    blk_q = min(q_blk, s)
+    blk_k = min(kv_blk, s)
+    o = flash_mha(
+        qf, kf, vf, blk_q=blk_q, blk_k=blk_k, window=window,
+        interpret=not _on_tpu(),
+    )
+    return jnp.transpose(o.reshape(b, h, s, dh), (0, 2, 1, 3))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) attention, GQA-aware."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, window=None):
+    """q (B,S,H,dh), k/v (B,S,KV,dh) -> (B,S,H,dh); causal; optional window."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, s, kvh, rep, dh)
+    scores = jnp.einsum(
+        "bqkrd,bckd->bkrqc", qg, k, preferred_element_type=jnp.float32
+    ) * (dh**-0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    scores = jnp.where(m[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkrqc,bckd->bqkrd", p.astype(v.dtype), v)
+    return o.reshape(b, s, h, dh)

@@ -1,0 +1,1 @@
+from repro.kernels.topk_sim import ops, ref  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for fused similarity + top-k node retrieval."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_similarity(q: jnp.ndarray, emb: jnp.ndarray, k: int):
+    """q: (Q, D), emb: (N, D) -> (scores (Q, k), indices (Q, k)).
+
+    Exact dot-product retrieval; ties broken by lower index (jax.lax.top_k
+    is stable in that sense).
+    """
+    scores = jnp.dot(q, emb.T, preferred_element_type=jnp.float32)
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,50 @@
+"""Serving launcher: --arch <id> spins up the slot-based engine with the
+arch's reduced config on CPU (full configs serve via the dry-run sharding
+on real hardware).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs as C
+from repro.models.transformer import model as tm
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    lm_archs = [a for a in C.ARCH_IDS if C.get_config(a).family == "lm"]
+    ap.add_argument("--arch", required=True, choices=lm_archs)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max_new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = C.get_config(args.arch).reduced_cfg
+    params = tm.init_params(jax.random.PRNGKey(0), cfg)
+    cache_len = cfg.sliding_window or 128
+    eng = ServeEngine(params, cfg, slots=args.slots, cache_len=cache_len)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for u in range(args.requests):
+        eng.submit(Request(
+            uid=u,
+            prompt_ids=rng.integers(1, cfg.vocab, size=int(rng.integers(4, 16))
+                                    ).astype(np.int32),
+            max_new_tokens=args.max_new,
+        ))
+    done = eng.run_to_completion()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"[{args.arch}] served {len(done)} requests / {toks} tokens "
+          f"in {dt:.1f}s ({toks / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

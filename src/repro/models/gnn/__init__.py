@@ -1,0 +1,46 @@
+"""GNN zoo: GIN, MeshGraphNet, GraphCast, EquiformerV2 (eSCN)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.gnn.config import GNNConfig
+from repro.models.gnn.simple import (
+    init_gin, apply_gin, init_mgn, apply_mgn, init_graphcast, apply_graphcast,
+)
+from repro.models.gnn.equiformer import init_equiformer, apply_equiformer
+
+_REGISTRY = {
+    "gin": (init_gin, apply_gin),
+    "meshgraphnet": (init_mgn, apply_mgn),
+    "graphcast": (init_graphcast, apply_graphcast),
+    "equiformer_v2": (init_equiformer, apply_equiformer),
+}
+
+
+def init_gnn(key, cfg: GNNConfig):
+    return _REGISTRY[cfg.arch][0](key, cfg)
+
+
+def apply_gnn(params, cfg: GNNConfig, inputs) -> jnp.ndarray:
+    return _REGISTRY[cfg.arch][1](params, cfg, inputs)
+
+
+def gnn_loss(params, cfg: GNNConfig, inputs):
+    """Masked node-level (or graph-level readout) regression MSE."""
+    out = apply_gnn(params, cfg, inputs)
+    if cfg.graph_readout and "graph_ids" in inputs:
+        import jax
+
+        gid = inputs["graph_ids"]
+        n_graphs = inputs["targets"].shape[0]
+        out = jax.ops.segment_sum(out, gid, num_segments=n_graphs)
+    tgt = inputs["targets"]
+    err = (out - tgt) ** 2
+    nm = inputs.get("node_mask")
+    if nm is not None and not cfg.graph_readout:
+        err = err * nm[:, None]
+        return jnp.sum(err) / jnp.maximum(jnp.sum(nm) * tgt.shape[-1], 1.0)
+    return jnp.mean(err)
+
+
+__all__ = ["GNNConfig", "init_gnn", "apply_gnn", "gnn_loss"]

@@ -1,0 +1,146 @@
+"""GIN, MeshGraphNet and GraphCast over the shared edge-list interface.
+
+* GIN (Xu et al., 2019): h' = MLP((1 + eps) h + sum_nbr h), learnable eps.
+* MeshGraphNet (Pfaff et al., 2021): per-layer edge MLP + node MLP with
+  residuals and LayerNorm'd 2-hidden-layer MLPs.
+* GraphCast (Lam et al., 2023): encoder MLP -> 16 interaction-network
+  processor layers (same family as MGN) -> decoder MLP to n_vars.  When the
+  assigned input shape supplies a single generic graph, the grid<->mesh
+  bipartite mapping degenerates to the identity (documented in DESIGN.md) —
+  the processor (the compute hot spot) is exercised unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import shard_hint
+from repro.models.gnn.common import (
+    apply_mlp, gather_src_dst, init_mlp, scatter_mean, scatter_sum,
+)
+from repro.models.gnn.config import GNNConfig
+
+
+def _agg(cfg: GNNConfig):
+    return scatter_mean if cfg.aggregator == "mean" else scatter_sum
+
+
+# ---------------------------------------------------------------- GIN ------
+def init_gin(key, cfg: GNNConfig):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_in if i == 0 else d
+        layers.append(
+            {"mlp": init_mlp(ks[i], [d_in] + [d] * cfg.mlp_layers),
+             "eps": jnp.zeros(())}
+        )
+    return {"layers": layers, "out": init_mlp(ks[-1], [d, cfg.d_out])}
+
+
+def apply_gin(params, cfg: GNNConfig, inputs):
+    h = inputs["node_feat"]
+    n = h.shape[0]
+    src, dst = inputs["edge_src"], inputs["edge_dst"]
+    em = inputs.get("edge_mask")
+    def one_layer(h, lp):
+        hs, _ = gather_src_dst(h, src, dst, n)
+        hs = shard_hint(hs, "dp", "model")
+        agg = _agg(cfg)(hs, dst, n, em)
+        h = apply_mlp(lp["mlp"], (1.0 + lp["eps"]) * h + agg, layernorm=True)
+        return shard_hint(h, None, "model")
+
+    for lp in params["layers"]:
+        h = jax.checkpoint(one_layer)(h, lp)
+    return apply_mlp(params["out"], h)
+
+
+# ------------------------------------------------------- MeshGraphNet ------
+def init_mgn(key, cfg: GNNConfig, d_edge_in: int = 4):
+    ks = jax.random.split(key, cfg.n_layers * 2 + 3)
+    d = cfg.d_hidden
+    mlp_dims = [d] * cfg.mlp_layers + [d]
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge": init_mlp(ks[2 * i], [3 * d] + mlp_dims),
+            "node": init_mlp(ks[2 * i + 1], [2 * d] + mlp_dims),
+        })
+    return {
+        "enc_node": init_mlp(ks[-3], [cfg.d_in] + mlp_dims),
+        "enc_edge": init_mlp(ks[-2], [d_edge_in] + mlp_dims),
+        "layers": layers,
+        "dec": init_mlp(ks[-1], [d, d, cfg.d_out]),
+    }
+
+
+def _edge_geometry(inputs, n):
+    """Default edge features: endpoint feature delta summary (4 dims)."""
+    if "edge_feat" in inputs and inputs["edge_feat"] is not None:
+        return inputs["edge_feat"]
+    h = inputs["node_feat"]
+    hs, hd = gather_src_dst(h, inputs["edge_src"], inputs["edge_dst"], n)
+    diff = (hs - hd)[:, :3] if h.shape[1] >= 3 else jnp.zeros((hs.shape[0], 3))
+    norm = jnp.linalg.norm(diff, axis=-1, keepdims=True)
+    return jnp.concatenate([diff, norm], axis=-1)
+
+
+def apply_mgn(params, cfg: GNNConfig, inputs):
+    n = inputs["node_feat"].shape[0]
+    src, dst = inputs["edge_src"], inputs["edge_dst"]
+    em = inputs.get("edge_mask")
+    h = apply_mlp(params["enc_node"], inputs["node_feat"], layernorm=True)
+    e = apply_mlp(params["enc_edge"], _edge_geometry(inputs, n), layernorm=True)
+    h = shard_hint(h, None, "model")
+    # edge state 2D-sharded (edges x features): keeps the concat + edge-MLP
+    # shard-local — feature-replicated e made GSPMD all-gather (E, d) per
+    # layer (880 GiB/step on ogb_products; §Perf cell 3)
+    e = shard_hint(e, "dp", "model")
+
+    def one_layer(carry, lp):
+        h, e = carry
+        hs, hd = gather_src_dst(h, src, dst, n)
+        e = e + apply_mlp(lp["edge"], jnp.concatenate([e, hs, hd], -1), layernorm=True)
+        e = shard_hint(e, "dp", "model")
+        agg = _agg(cfg)(e, dst, n, em)
+        h = h + apply_mlp(lp["node"], jnp.concatenate([h, agg], -1), layernorm=True)
+        h = shard_hint(h, None, "model")
+        return h, e
+
+    # block-checkpoint groups of 4 layers: backward saves (h, e) only at
+    # block boundaries instead of every MLP intermediate per edge (401 GiB
+    # -> block-boundary cost on ogb_products; EXPERIMENTS.md §Perf)
+    layers = params["layers"]
+    for i in range(0, len(layers), 4):
+        blk = layers[i : i + 4]
+
+        def block_fn(carry, blk=blk):
+            for lp in blk:
+                carry = one_layer(carry, lp)
+            return carry
+
+        h, e = jax.checkpoint(block_fn)((h, e))
+    return apply_mlp(params["dec"], h)
+
+
+# ----------------------------------------------------------- GraphCast ------
+def init_graphcast(key, cfg: GNNConfig, d_edge_in: int = 4):
+    """Encoder–processor–decoder; inputs are the n_vars atmospheric stack."""
+    k1, k2 = jax.random.split(key)
+    proc_cfg = GNNConfig(
+        name="proc", arch="meshgraphnet", n_layers=cfg.n_layers,
+        d_hidden=cfg.d_hidden, d_in=cfg.n_vars, d_out=cfg.n_vars,
+        mlp_layers=cfg.mlp_layers, aggregator=cfg.aggregator,
+    )
+    return init_mgn(k1, proc_cfg, d_edge_in=d_edge_in)
+
+
+def apply_graphcast(params, cfg: GNNConfig, inputs):
+    proc_cfg = GNNConfig(
+        name="proc", arch="meshgraphnet", n_layers=cfg.n_layers,
+        d_hidden=cfg.d_hidden, d_in=cfg.n_vars, d_out=cfg.n_vars,
+        mlp_layers=cfg.mlp_layers, aggregator=cfg.aggregator,
+    )
+    # GraphCast predicts the state *increment*
+    return inputs["node_feat"] + apply_mgn(params, proc_cfg, inputs)

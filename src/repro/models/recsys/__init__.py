@@ -1,0 +1,9 @@
+from repro.models.recsys.wide_deep import (
+    WideDeepConfig, init_wide_deep, wide_deep_logits, wide_deep_loss,
+    retrieval_scores,
+)
+
+__all__ = [
+    "WideDeepConfig", "init_wide_deep", "wide_deep_logits", "wide_deep_loss",
+    "retrieval_scores",
+]

@@ -1,0 +1,4 @@
+from repro.models.transformer.config import TransformerConfig, MoEConfig
+from repro.models.transformer import model, attention, moe, generate
+
+__all__ = ["TransformerConfig", "MoEConfig", "model", "attention", "moe", "generate"]

@@ -1,0 +1,289 @@
+"""Attention: RoPE, chunked (flash-style) causal/sliding-window attention for
+train/prefill, and KV-cache decode attention.
+
+The chunked path is the memory-critical piece: a double `lax.scan` over
+(q-chunk, kv-chunk) tiles with online-softmax accumulators keeps the largest
+intermediate at (B, KV, rep, Cq, Ck) instead of (B, H, S, S) — the same
+blocking the Pallas flash kernel (repro.kernels.flash_attn) uses on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _tile_mask(qi, kj, cq, ck, window):
+    """(Cq, Ck) causal/windowed mask for tile at q-offset qi, kv-offset kj."""
+    iq = qi + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    jk = kj + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    m = jk <= iq
+    if window is not None:
+        m &= (iq - jk) < window
+    return m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "q_chunk", "kv_chunk", "use_kernel")
+)
+def chunked_attention(
+    q: jnp.ndarray,  # (B, S, H, dh)
+    k: jnp.ndarray,  # (B, S, KV, dh)
+    v: jnp.ndarray,  # (B, S, KV, dh)
+    *,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Differentiable flash attention (custom VJP).
+
+    Naive autodiff through the (q-block, kv-block) double scan stashes every
+    softmax tile — equivalent to materializing the full (B, H, S, S) score
+    matrix (measured: 227 GiB/device for starcoder2 train_4k; EXPERIMENTS.md
+    §Perf iteration 0).  The custom backward recomputes tiles from the saved
+    (q, k, v, o, logsumexp) instead — the FlashAttention-2 bwd schedule."""
+    if use_kernel:
+        from repro.kernels.flash_attn import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, window=window, q_blk=q_chunk, kv_blk=kv_chunk
+        )
+    s = q.shape[1]
+    cq = min(q_chunk, s)
+    ck = min(kv_chunk, s)
+    assert s % cq == 0 and s % ck == 0, (s, cq, ck)
+    return _flash(window, cq, ck)(q, k, v)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash(window, cq, ck):
+    """custom_vjp flash attention specialized to (window, q_chunk, kv_chunk)."""
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return _flash_fwd(q, k, v, window, cq, ck)[0]
+
+    def fwd(q, k, v):
+        o, lse = _flash_fwd(q, k, v, window, cq, ck)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        return _flash_bwd(res, do, window, cq, ck)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def _flash_fwd(q, k, v, window, cq, ck):
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    nq, nk = s // cq, s // ck
+    scale = dh**-0.5
+    qg = q.reshape(b, nq, cq, kvh, rep, dh)
+    kg = k.reshape(b, nk, ck, kvh, dh)
+    vg = v.reshape(b, nk, ck, kvh, dh)
+
+    def q_block(carry, qi):
+        qb = qg[:, qi]  # (B, Cq, KV, rep, dh)
+
+        def kv_block(acc, kj):
+            m, l, o = acc
+            kb, vb = kg[:, kj], vg[:, kj]  # (B, Ck, KV, dh)
+            s_ = jnp.einsum(
+                "bqkrd,bckd->bkrqc", qb, kb, preferred_element_type=jnp.float32
+            ) * scale  # (B, KV, rep, Cq, Ck)
+            tm = _tile_mask(qi * cq, kj * ck, cq, ck, window)
+            s_ = jnp.where(tm[None, None, None], s_, NEG)
+            m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bkrqc,bckd->bkrqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, o), None
+
+        m0 = jnp.full((b, kvh, rep, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, rep, cq), jnp.float32)
+        o0 = jnp.zeros((b, kvh, rep, cq, dh), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_block, (m0, l0, o0), jnp.arange(nk, dtype=jnp.int32)
+        )
+        out = (o / jnp.maximum(l[..., None], 1e-20)).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))  # (B, KV, rep, Cq)
+        return carry, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, jnp.arange(nq, dtype=jnp.int32))
+    # outs: (nq, B, KV, rep, Cq, dh) -> (B, S, H, dh)
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nq, KV, rep, Cq, dh)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(b, s, h, dh)
+    lse = jnp.moveaxis(lses, 0, 1)  # (B, nq, KV, rep, Cq)
+    return out, lse
+
+
+def _flash_bwd(res, do, window, cq, ck):
+    """FlashAttention-2 backward: recompute score tiles from (q,k,v,lse);
+    pass 1 accumulates dq over kv blocks, pass 2 accumulates (dk, dv) over
+    q blocks.  Live memory = one tile + the output grads."""
+    q, k, v, o, lse = res
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    nq, nk = s // cq, s // ck
+    scale = dh**-0.5
+    qg = q.reshape(b, nq, cq, kvh, rep, dh)
+    kg = k.reshape(b, nk, ck, kvh, dh)
+    vg = v.reshape(b, nk, ck, kvh, dh)
+    og = o.reshape(b, nq, cq, kvh, rep, dh)
+    dog = do.reshape(b, nq, cq, kvh, rep, dh)
+    # delta[iq] = rowsum(do * o): (B, nq, KV, rep, Cq)
+    delta = jnp.einsum("bnqkrd,bnqkrd->bnkrq", dog.astype(jnp.float32),
+                       og.astype(jnp.float32))
+
+    def tile_p(qb, kb, lse_q, qi, kj):
+        s_ = jnp.einsum(
+            "bqkrd,bckd->bkrqc", qb, kb, preferred_element_type=jnp.float32
+        ) * scale
+        tm = _tile_mask(qi * cq, kj * ck, cq, ck, window)
+        s_ = jnp.where(tm[None, None, None], s_, NEG)
+        return jnp.exp(s_ - lse_q[..., None])  # (B, KV, rep, Cq, Ck)
+
+    # ---- pass 1: dq per q block (scan over kv blocks inside) ---------------
+    def dq_block(_, qi):
+        qb = qg[:, qi]
+        lse_q, dob, dlt = lse[:, qi], dog[:, qi], delta[:, qi]
+
+        def inner(acc, kj):
+            p = tile_p(qb, kg[:, kj], lse_q, qi, kj)
+            dp = jnp.einsum("bqkrd,bckd->bkrqc", dob.astype(jnp.float32),
+                            vg[:, kj].astype(jnp.float32))
+            ds = p * (dp - dlt[..., None]) * scale
+            acc = acc + jnp.einsum("bkrqc,bckd->bqkrd", ds,
+                                   kg[:, kj].astype(jnp.float32))
+            return acc, None
+
+        dq0 = jnp.zeros((b, cq, kvh, rep, dh), jnp.float32)
+        dqb, _ = jax.lax.scan(inner, dq0, jnp.arange(nk, dtype=jnp.int32))
+        return None, dqb
+
+    _, dqs = jax.lax.scan(dq_block, None, jnp.arange(nq, dtype=jnp.int32))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, s, h, dh).astype(q.dtype)
+
+    # ---- pass 2: dk, dv per kv block (scan over q blocks inside) -----------
+    def dkv_block(_, kj):
+        kb, vb = kg[:, kj], vg[:, kj]
+
+        def inner(acc, qi):
+            dk_acc, dv_acc = acc
+            qb = qg[:, qi]
+            p = tile_p(qb, kb, lse[:, qi], qi, kj)
+            dob = dog[:, qi].astype(jnp.float32)
+            dv_acc = dv_acc + jnp.einsum("bkrqc,bqkrd->bckd", p, dob)
+            dp = jnp.einsum("bqkrd,bckd->bkrqc", dob, vb.astype(jnp.float32))
+            ds = p * (dp - delta[:, qi][..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum("bkrqc,bqkrd->bckd", ds,
+                                         qb.astype(jnp.float32))
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, ck, kvh, dh), jnp.float32)
+        (dkb, dvb), _ = jax.lax.scan(
+            inner, (z, z), jnp.arange(nq, dtype=jnp.int32)
+        )
+        return None, (dkb, dvb)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_block, None, jnp.arange(nk, dtype=jnp.int32))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, s, kvh, dh).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, s, kvh, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+def dense_attention(q, k, v, *, window=None):
+    """Reference O(S^2)-memory attention (tests / tiny shapes)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, s, kvh, rep, dh)
+    s_ = jnp.einsum("bqkrd,bckd->bkrqc", qg, k, preferred_element_type=jnp.float32)
+    s_ = s_ * (dh**-0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    s_ = jnp.where(m[None, None, None], s_, NEG)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bkrqc,bckd->bqkrd", p.astype(v.dtype), v)
+    return o.reshape(b, s, h, dh)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, dh) — current-step query (already RoPE'd)
+    k_cache: jnp.ndarray,  # (B, Sc, KV, dh) — rotated keys at absolute pos
+    v_cache: jnp.ndarray,  # (B, Sc, KV, dh)
+    kv_pos: jnp.ndarray,  # (B, Sc) absolute positions, -1 = empty slot
+    cur_pos: jnp.ndarray,  # (B,) position of the current token
+    window: Optional[int] = None,
+    k_new: Optional[jnp.ndarray] = None,  # (B, 1, KV, dh) — current token's
+    v_new: Optional[jnp.ndarray] = None,  # k/v, appended WITHOUT writing the
+    k_scale: Optional[jnp.ndarray] = None,  # (B, Sc, KV) int8-mode absmax
+    v_scale: Optional[jnp.ndarray] = None,  # scales (dequant fused into dots)
+) -> jnp.ndarray:  # cache (avoids per-layer full-cache copies; §Perf decode)
+    b, _, h, dh = q.shape
+    kvh = k_cache.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, dh)
+    s_ = jnp.einsum(
+        "bkrd,bckd->bkrc", qg, k_cache.astype(qg.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (dh**-0.5)  # (B, KV, rep, Sc)
+    if k_scale is not None:  # int8 cache: fold dequant scale into the scores
+        s_ = s_ * jnp.transpose(k_scale, (0, 2, 1)).astype(jnp.float32)[:, :, None]
+    # strict `<` : if k_new is given the current position is handled by the
+    # appended self term, and the ring slot being overwritten is stale.
+    lim_ok = kv_pos < cur_pos[:, None] if k_new is not None else (
+        kv_pos <= cur_pos[:, None]
+    )
+    ok = (kv_pos >= 0) & lim_ok
+    if window is not None:
+        ok &= (cur_pos[:, None] - kv_pos) < window
+    s_ = jnp.where(ok[:, None, None], s_, NEG)
+    if k_new is None:
+        p = jax.nn.softmax(s_, axis=-1)
+        if v_scale is not None:  # fold dequant into the probabilities
+            p = p * jnp.transpose(v_scale, (0, 2, 1)).astype(p.dtype)[:, :, None]
+            o = jnp.einsum(
+                "bkrc,bckd->bkrd", p, v_cache.astype(p.dtype),
+                preferred_element_type=jnp.float32,
+            )
+            return o.astype(qg.dtype).reshape(b, 1, h, dh)
+        o = jnp.einsum("bkrc,bckd->bkrd", p.astype(v_cache.dtype), v_cache)
+        return o.reshape(b, 1, h, dh)
+    s_self = jnp.einsum(
+        "bkrd,bkd->bkr", qg, k_new[:, 0], preferred_element_type=jnp.float32
+    )[..., None] * (dh**-0.5)  # (B, KV, rep, 1)
+    m = jnp.maximum(jnp.max(s_, axis=-1, keepdims=True), s_self)
+    e_c = jnp.exp(s_ - m)
+    e_s = jnp.exp(s_self - m)
+    den = jnp.sum(e_c, axis=-1, keepdims=True) + e_s
+    o = jnp.einsum("bkrc,bckd->bkrd", (e_c / den).astype(v_cache.dtype), v_cache)
+    o = o + (e_s / den).astype(v_new.dtype) * v_new[:, 0][:, :, None, :]
+    return o.reshape(b, 1, h, dh)

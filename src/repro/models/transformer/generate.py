@@ -1,0 +1,75 @@
+"""LM generation: prefill + KV-cache greedy/temperature decoding.
+
+Implements the RGL generation interface (repro.core.generation.Generator)
+on top of any TransformerConfig — the offline stand-in for the paper's
+GPT-4o-mini / DeepSeek-V3 backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import model as tm
+from repro.models.transformer.config import TransformerConfig
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "max_new", "cache_len", "temperature")
+)
+def generate_tokens(
+    params, prompt, true_len, key, cfg: TransformerConfig,
+    max_new: int, cache_len: int, temperature: float = 0.0,
+):
+    """prompt (B, S) -> generated (B, max_new) int32."""
+    logits, cache = tm.prefill(params, prompt, true_len, cfg, cache_len)
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        g = -jnp.log(-jnp.log(jax.random.uniform(k, lg.shape) + 1e-9) + 1e-9)
+        return jnp.argmax(lg / temperature + g, axis=-1).astype(jnp.int32)
+
+    k0, key = jax.random.split(key)
+    tok0 = sample(logits, k0)
+
+    def body(carry, k):
+        tok, cache = carry
+        logits, cache = tm.decode_step(params, cache, tok, cfg)
+        nxt = sample(logits, k)
+        return (nxt, cache), tok
+
+    keys = jax.random.split(key, max_new)
+    (_, _), toks = jax.lax.scan(body, (tok0, cache), keys)
+    return jnp.swapaxes(toks, 0, 1)  # (B, max_new)
+
+
+class LMGenerator:
+    """core.generation.Generator backend over the in-repo LM stack."""
+
+    def __init__(self, params, cfg: TransformerConfig, vocab, *,
+                 cache_len: int = 1024, temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.vocab = vocab
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.id_to_word = {v + 6: k for k, v in vocab.word_to_id.items()}
+
+    def generate(self, prompt_ids, prompt_mask, max_new_tokens: int = 32) -> list:
+        prompt = jnp.asarray(prompt_ids, jnp.int32)
+        true_len = jnp.asarray(prompt_mask).sum(axis=1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        toks = generate_tokens(
+            self.params, prompt, true_len, k, self.cfg,
+            max_new=max(max_new_tokens, 1), cache_len=self.cache_len,
+            temperature=self.temperature,
+        )
+        out = []
+        for row in np.asarray(toks):
+            words = [self.id_to_word.get(int(t), "") for t in row]
+            out.append(" ".join(w for w in words if w))
+        return out

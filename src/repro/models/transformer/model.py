@@ -1,0 +1,373 @@
+"""Decoder-only LM: init / train forward / prefill / decode, scan-over-layers.
+
+Covers all 5 assigned LM architectures: GQA + RoPE, dense-SwiGLU or MoE FFN,
+optional sliding-window attention (starcoder2), streamed cross-entropy (vocab
+up to 131k), ring-buffer KV cache for long-context decode.
+
+Layers are stacked on a leading L axis and driven by `lax.scan` (+ optional
+`jax.checkpoint`), so HLO size and compile time are depth-independent — a
+hard requirement for the 62-layer/33B dry-run on this container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import shard_hint
+from repro.models.transformer import attention as attn
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.moe import init_moe_params, moe_ffn
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    s = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * s * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(key, cfg: TransformerConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    keys = jax.random.split(key, 8)
+    s_d = d**-0.5
+    L = cfg.n_layers
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    layers = {
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "wq": nrm(keys[0], (L, d, h * dh), s_d),
+        "wk": nrm(keys[1], (L, d, kv * dh), s_d),
+        "wv": nrm(keys[2], (L, d, kv * dh), s_d),
+        "wo": nrm(keys[3], (L, h * dh, d), (h * dh) ** -0.5),
+    }
+    if cfg.moe is None:
+        layers.update(
+            w1=nrm(keys[4], (L, d, cfg.d_ff), s_d),
+            w3=nrm(keys[5], (L, d, cfg.d_ff), s_d),
+            w2=nrm(keys[6], (L, cfg.d_ff, d), cfg.d_ff**-0.5),
+        )
+    else:
+        moe_keys = jax.random.split(keys[4], L)
+        per_layer = [init_moe_params(k, d, cfg.moe, dtype) for k in moe_keys]
+        layers["moe"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    k_e, k_h = jax.random.split(keys[7])
+    return {
+        "embed": nrm(k_e, (cfg.vocab, d), 1.0),
+        "layers": layers,
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "head": nrm(k_h, (d, cfg.vocab), s_d),
+    }
+
+
+# --------------------------------------------------------------------------
+# shared layer body
+# --------------------------------------------------------------------------
+def _attn_proj(p, xn, cfg: TransformerConfig):
+    b, s, _ = xn.shape
+    q = (xn @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (xn @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (xn @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    return q, k, v
+
+
+def _layer_train(x, p, cfg: TransformerConfig, positions):
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _attn_proj(p, xn, cfg)
+    q = attn.rope(q, positions, cfg.rope_theta)
+    k = attn.rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    if s <= max(cfg.q_chunk, 256):
+        o = attn.dense_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = attn.chunked_attention(
+            q, k, v, window=cfg.sliding_window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    b, s_, h, dh = o.shape
+    x = x + (o.reshape(b, s_, h * dh) @ p["wo"]).astype(x.dtype)
+
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        hidden = jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])
+        y = (hidden @ p["w2"]).astype(x.dtype)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        t = b * s_
+        y, aux = moe_ffn(p["moe"], xn.reshape(t, -1), cfg.moe)
+        y = y.reshape(b, s_, -1)
+    return x + y, aux
+
+
+# --------------------------------------------------------------------------
+# train-time forward + streamed loss
+# --------------------------------------------------------------------------
+def backbone(params, tokens: jnp.ndarray, cfg: TransformerConfig) -> tuple:
+    """tokens (B, S) -> (hidden (B, S, D), aux_loss)."""
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(carry, p):
+        x, aux = carry
+        x, a = _layer_train(x, p, cfg, positions)
+        return (x, aux + a), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux), _ = fn((x, aux), p)
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), aux
+
+
+def lm_logits(params, tokens, cfg: TransformerConfig):
+    """Materialized logits — tests/small shapes only (V can be 131k)."""
+    x, _ = backbone(params, tokens, cfg)
+    return x.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+
+
+def lm_loss(params, tokens, loss_mask, cfg: TransformerConfig, aux_weight=0.01):
+    """Next-token cross-entropy, streamed over sequence chunks.
+
+    tokens (B, S) int32; loss_mask (B, S) — mask[t] gates prediction of
+    token[t+1].  Returns (loss, metrics dict).
+    """
+    x, aux = backbone(params, tokens, cfg)
+    b, s, d = x.shape
+    c = min(cfg.loss_chunk, s - 1)
+    n_pred = s - 1
+    nc = n_pred // c
+    rem = n_pred - nc * c
+    head = params["head"]
+
+    def chunk_nll(xc, yc, mc):
+        lg = xc.astype(jnp.float32) @ head.astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * mc), jnp.sum(mc)
+
+    def body(acc, i):
+        st = i * c
+        xc = jax.lax.dynamic_slice_in_dim(x, st, c, axis=1)
+        yc = jax.lax.dynamic_slice_in_dim(tokens, st + 1, c, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(loss_mask, st, c, axis=1).astype(jnp.float32)
+        nll, cnt = chunk_nll(xc, yc, mc)
+        return (acc[0] + nll, acc[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), jnp.arange(nc, dtype=jnp.int32)
+    )
+    if rem:
+        nll_r, cnt_r = chunk_nll(
+            x[:, nc * c : s - 1],
+            tokens[:, nc * c + 1 :],
+            loss_mask[:, nc * c : s - 1].astype(jnp.float32),
+        )
+        nll, cnt = nll + nll_r, cnt + cnt_r
+    loss = nll / jnp.maximum(cnt, 1.0)
+    total = loss + aux_weight * aux
+    return total, {"nll": loss, "aux": aux, "tokens": cnt}
+
+
+# --------------------------------------------------------------------------
+# serving: KV cache, prefill, decode
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class KVCache:
+    k: jnp.ndarray  # (L, B, Sc, KV, dh) — int8 when quantized
+    v: jnp.ndarray  # (L, B, Sc, KV, dh)
+    pos: jnp.ndarray  # (B, Sc) absolute position per slot, -1 empty
+    cursor: jnp.ndarray  # (B,) next absolute position to write
+    k_scale: object = None  # (L, B, Sc, KV) bf16 absmax scales (int8 mode)
+    v_scale: object = None
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "pos", "cursor", "k_scale", "v_scale"],
+    meta_fields=[],
+)
+
+
+def _quant_rows(x: jnp.ndarray):
+    """Per-(.., KV)-row absmax int8 quantization over d_head."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, cache_len: int) -> KVCache:
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_quant:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8),
+            v=jnp.zeros(shape, jnp.int8),
+            pos=jnp.full((batch, cache_len), -1, jnp.int32),
+            cursor=jnp.zeros((batch,), jnp.int32),
+            k_scale=jnp.zeros(shape[:-1], jnp.bfloat16),
+            v_scale=jnp.zeros(shape[:-1], jnp.bfloat16),
+        )
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.full((batch, cache_len), -1, jnp.int32),
+        cursor=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(params, tokens, true_len, cfg: TransformerConfig, cache_len: int):
+    """Run the prompt, fill the cache, return (next_token_logits, cache).
+
+    tokens (B, S) left-aligned, padded; true_len (B,).  Requires S <= cache_len.
+    """
+    b, s = tokens.shape
+    assert s <= cache_len
+    x = params["embed"][tokens]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def body(x, p):
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _attn_proj(p, xn, cfg)
+        q = attn.rope(q, positions, cfg.rope_theta)
+        k = attn.rope(k, positions, cfg.rope_theta)
+        if s <= max(cfg.q_chunk, 256):
+            o = attn.dense_attention(q, k, v, window=cfg.sliding_window)
+        else:
+            o = attn.chunked_attention(
+                q, k, v, window=cfg.sliding_window,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+        x = x + (o.reshape(b, s, -1) @ p["wo"]).astype(x.dtype)
+        xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = (jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])) @ p["w2"]
+        else:
+            y, _ = moe_ffn(p["moe"], xn.reshape(b * s, -1), cfg.moe)
+            y = y.reshape(b, s, -1)
+        # cache rows: batch over dp, sequence over "model" (decode layout) —
+        # unhinted, GSPMD replicated the 257 GB cache (§Perf).
+        k = shard_hint(k, "dp", "model", None, None)
+        v = shard_hint(v, "dp", "model", None, None)
+        return x + y.astype(x.dtype), (k, v)
+
+    fn = jax.checkpoint(body, static_argnums=()) if cfg.remat else body
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(fn, x, params["layers"])
+    else:  # unrolled (cost-analysis variants)
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (k_i, v_i) = fn(x, p)
+            ks_l.append(k_i)
+            vs_l.append(v_i)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    # cache layout
+    pad = cache_len - s
+    kc = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = shard_hint(kc, None, "dp", "model", None, None)
+    vc = shard_hint(vc, None, "dp", "model", None, None)
+    slot_pos = jnp.arange(cache_len, dtype=jnp.int32)[None, :]
+    pos = jnp.where(slot_pos < true_len[:, None], slot_pos, -1)
+    if cfg.kv_quant:
+        kq, ksc = _quant_rows(kc)
+        vq, vsc = _quant_rows(vc)
+        cache = KVCache(k=kq, v=vq, pos=pos, cursor=true_len.astype(jnp.int32),
+                        k_scale=ksc, v_scale=vsc)
+    else:
+        cache = KVCache(k=kc, v=vc, pos=pos, cursor=true_len.astype(jnp.int32))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, jnp.maximum(true_len - 1, 0)[:, None, None].astype(jnp.int32), axis=1
+    )  # (B, 1, D)
+    logits = last.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cache: KVCache, token, cfg: TransformerConfig):
+    """One decode step.  token (B,) int32 -> (logits (B, V), new cache)."""
+    b = token.shape[0]
+    sc = cache.k.shape[2]
+    cur = cache.cursor  # (B,) position of the token being processed
+    slot = cur % sc
+    x = params["embed"][token][:, None]  # (B, 1, D)
+    bidx = jnp.arange(b)
+    # Masked-broadcast cache update (elementwise => shards cleanly; a scatter
+    # into the sequence-sharded cache made GSPMD gather the whole cache).
+    # An append-attention variant with a single top-level scatter was tried
+    # and REFUTED on memory (§Perf decode iterations: 28.8 -> 37.9 GiB —
+    # scan xs double-buffering dominates); decode_attention(k_new=...) is
+    # kept for serving-engine use.
+    slot_mask = jnp.arange(sc, dtype=jnp.int32)[None, :] == slot[:, None]  # (B, Sc)
+    quant = cfg.kv_quant
+
+    def body(x, inputs):
+        p, kc, vc, ks, vs = inputs
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _attn_proj(p, xn, cfg)
+        q = attn.rope(q, cur[:, None], cfg.rope_theta)
+        k = attn.rope(k, cur[:, None], cfg.rope_theta)
+        if quant:
+            kq, ksc = _quant_rows(k)
+            vq, vsc = _quant_rows(v)
+            kc = jnp.where(slot_mask[:, :, None, None], kq[:, 0][:, None], kc)
+            vc = jnp.where(slot_mask[:, :, None, None], vq[:, 0][:, None], vc)
+            ks = jnp.where(slot_mask[:, :, None], ksc[:, 0][:, None], ks)
+            vs = jnp.where(slot_mask[:, :, None], vsc[:, 0][:, None], vs)
+        else:
+            kc = jnp.where(slot_mask[:, :, None, None], k[:, 0][:, None], kc)
+            vc = jnp.where(slot_mask[:, :, None, None], v[:, 0][:, None], vc)
+        pos = jnp.where(slot_mask, cur[:, None], cache.pos)
+        o = attn.decode_attention(
+            q, kc, vc, pos, cur, cfg.sliding_window, k_scale=ks, v_scale=vs
+        )
+        x = x + (o.reshape(b, 1, -1) @ p["wo"]).astype(x.dtype)
+        xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = (jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])) @ p["w2"]
+        else:
+            y, _ = moe_ffn(p["moe"], xn.reshape(b, -1), cfg.moe)
+            y = y[:, None]
+        return x + y.astype(x.dtype), (kc, vc, ks, vs)
+
+    xs = (params["layers"], cache.k, cache.v, cache.k_scale, cache.v_scale)
+    if cfg.scan_layers:
+        x, (kc, vc, ks, vs) = jax.lax.scan(body, x, xs)
+    else:  # unrolled (cost-analysis variants)
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            x, o_i = body(x, sl)
+            outs.append(o_i)
+        cols = list(zip(*outs))
+        kc, vc = jnp.stack(cols[0]), jnp.stack(cols[1])
+        ks = jnp.stack(cols[2]) if quant else None
+        vs = jnp.stack(cols[3]) if quant else None
+    new_pos = jnp.where(slot_mask, cur[:, None], cache.pos)
+    new_cache = KVCache(k=kc, v=vc, pos=new_pos, cursor=cur + 1,
+                        k_scale=ks, v_scale=vs)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x[:, 0].astype(jnp.float32) @ params["head"].astype(jnp.float32)
+    return logits, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def serve_step(params, cache: KVCache, token, cfg: TransformerConfig):
+    """Greedy decode step — the unit the decode/long dry-run shapes lower."""
+    logits, cache = decode_step(params, cache, token, cfg)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache

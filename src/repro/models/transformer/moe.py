@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN (GShard/Mixtral-style) with fixed shapes.
+
+TPU-idiomatic dispatch: tokens are sorted by assigned expert (stable argsort),
+truncated at per-expert capacity C = cf * T * k / E, batched through an
+(E, C, D) x (E, D, F) grouped GEMM, and combined back with gate weights via
+segment-sum.  All shapes static; overflow tokens are dropped (standard
+capacity-factor semantics) and the auxiliary load-balance loss (Switch) keeps
+the router near-uniform.
+
+Sharding: "expert" mode shards the E axis (EP — dispatch becomes all-to-all
+under GSPMD); "tp" mode shards the F axis (TP within expert, for E < mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import shard_hint
+from repro.models.transformer.config import MoEConfig
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff
+    s_in = d_model**-0.5
+    s_ff = f**-0.5
+    return {
+        "router": (jax.random.normal(k1, (d_model, e)) * s_in).astype(jnp.float32),
+        "w1": (jax.random.normal(k2, (e, d_model, f)) * s_in).astype(dtype),
+        "w3": (jax.random.normal(k3, (e, d_model, f)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k4, (e, f, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: MoEConfig):
+    """x: (T, D) token-major. Returns (y (T, D), aux_loss scalar)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = max(8, -(-cap // 8) * 8)  # pad capacity to a multiple of 8
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_e = top_e.reshape(-1)  # (T*k,) expert of each (token, slot)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)  # (T*k,)
+    se = flat_e[order]
+    st = flat_tok[order]
+    sg = flat_gate[order]
+    # rank within expert group = idx - start_of_group
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts  # (E,)
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)  # sentinel = E*C
+
+    xg = shard_hint(x[st], "dp", None)  # (T*k, D) tokens in sorted order
+    xpad = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xg, 0)
+    )[: e * cap]
+    xe = xpad.reshape(e, cap, d)
+    # EP: experts over "model" (dispatch = all-to-all); TP: capacity over dp,
+    # d_ff over "model" inside each expert.
+    if cfg.shard_mode == "expert":
+        xe = shard_hint(xe, "model", None, None)
+    else:
+        xe = shard_hint(xe, None, "dp", None)
+
+    # ---- grouped GEMM (SwiGLU experts) -------------------------------------
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w1"], preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w3"], preferred_element_type=jnp.float32)
+    if cfg.shard_mode == "expert":
+        h = shard_hint(h, "model", None, None)
+    else:
+        h = shard_hint(h, None, "dp", "model")
+    h = (jax.nn.silu(h) * g).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w2"], preferred_element_type=jnp.float32)
+    ye = shard_hint(
+        ye, *(("model", None, None) if cfg.shard_mode == "expert"
+              else (None, "dp", None))
+    )
+
+    # ---- combine -------------------------------------------------------------
+    yflat = ye.reshape(e * cap, d)
+    yg = shard_hint(
+        jnp.where(keep[:, None], yflat[jnp.minimum(slot, e * cap - 1)], 0.0),
+        "dp", None,
+    )
+    y = jax.ops.segment_sum(yg * sg[:, None], st, num_segments=t)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+vLLM-style scheduling adapted to TPU constraints (static shapes): a fixed
+(B, cache_len) KV arena; each of the B slots holds one in-flight request.
+Every engine step runs ONE jitted decode step for all slots; finished or
+empty slots are refilled by (re-)prefilling the pending queue — prefill for
+slot i writes its cache rows via a masked batched update, never reshaping.
+
+This is the RGL generation stage's server: prompts arrive already tokenized
+by the pipeline (retrieval happens upstream, possibly on other hosts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import model as tm
+from repro.models.transformer.config import TransformerConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt_ids: np.ndarray  # (L,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self, params, cfg: TransformerConfig, *, slots: int = 8,
+        cache_len: int = 512, eos_id: Optional[int] = None,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.queue: deque = deque()
+        self.active: list = [None] * slots
+        self.cache = tm.init_cache(cfg, slots, cache_len)
+        self.cur_tok = jnp.zeros((slots,), jnp.int32)
+        self.live = np.zeros(slots, bool)
+        self._decode = jax.jit(
+            lambda p, c, t: tm.serve_step(p, c, t, cfg), static_argnums=()
+        )
+        self._prefill_one = jax.jit(
+            lambda p, toks, tl: tm.prefill(p, toks, tl, cfg, cache_len)
+        )
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.live[i] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            L = len(req.prompt_ids)
+            toks = jnp.asarray(req.prompt_ids, jnp.int32)[None]
+            tl = jnp.asarray([L], jnp.int32)
+            logits, cache1 = self._prefill_one(self.params, toks, tl)
+            first = int(jnp.argmax(logits[0]))
+            # merge this request's rows into the shared arena
+            self.cache = tm.KVCache(
+                k=self.cache.k.at[:, i].set(cache1.k[:, 0]),
+                v=self.cache.v.at[:, i].set(cache1.v[:, 0]),
+                pos=self.cache.pos.at[i].set(cache1.pos[0]),
+                cursor=self.cache.cursor.at[i].set(cache1.cursor[0]),
+            )
+            self.cur_tok = self.cur_tok.at[i].set(first)
+            req.out_tokens.append(first)
+            self.active[i] = req
+            self.live[i] = True
+
+    # -- one decode step for every live slot ----------------------------------
+    def step(self) -> list:
+        self._admit()
+        if not self.live.any():
+            return []
+        nxt, self.cache = self._decode(self.params, self.cache, self.cur_tok)
+        self.cur_tok = nxt
+        finished = []
+        toks = np.asarray(nxt)
+        for i, req in enumerate(self.active):
+            if req is None or not self.live[i]:
+                continue
+            req.out_tokens.append(int(toks[i]))
+            hit_eos = self.eos_id is not None and int(toks[i]) == self.eos_id
+            full = (
+                len(req.out_tokens) >= req.max_new_tokens
+                or int(self.cache.cursor[i]) >= self.cache_len
+            )
+            if hit_eos or full:
+                req.done = True
+                finished.append(req)
+                self.active[i] = None
+                self.live[i] = False
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list:
+        done = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and not self.live.any():
+                break
+        return done

@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.loop import make_train_step, TrainLoop
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "make_train_step", "TrainLoop",
+]

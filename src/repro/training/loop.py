@@ -1,0 +1,114 @@
+"""Training loop: microbatched grad accumulation, compression hook, fault
+hooks, async checkpointing.
+
+`make_train_step` builds a jit-able step closed over loss_fn:
+  * microbatching via `lax.scan` over gradient-accumulation slices (the
+    activation-memory lever for the big LM configs),
+  * optional error-feedback gradient compression before the DP reduction,
+  * AdamW update with sharded (ZeRO-style) states.
+
+`TrainLoop` drives it with StragglerMonitor + Heartbeat + AsyncCheckpointer
+wired in; `tests/test_fault.py` kills and restores it mid-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import CompressionConfig, compress, init_residuals
+from repro.distributed.fault import Heartbeat, StragglerMonitor
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(
+    loss_fn: Callable,  # (params, batch) -> (loss, metrics)
+    opt_cfg: AdamWConfig,
+    comp_cfg: CompressionConfig = CompressionConfig(),
+    n_microbatches: int = 1,
+    donate: bool = True,
+):
+    """Returns (init_state_fn, step_fn). State = {params, opt, residuals}."""
+
+    def init_state(params):
+        state = {"params": params, "opt": adamw_init(params, opt_cfg)}
+        if comp_cfg.kind != "none":
+            state["residuals"] = init_residuals(params)
+        return state
+
+    def grads_of(params, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        def micro(acc, mb):
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            g_acc, l_acc = acc
+            return (
+                jax.tree.map(lambda a, b: a + b, g_acc, g),
+                l_acc + loss,
+            ), metrics
+
+        # split batch leaves on axis 0 into (n_micro, b/n_micro, ...)
+        mbs = jax.tree.map(
+            lambda x: x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                                + x.shape[1:]),
+            batch,
+        )
+        g0 = jax.tree.map(jnp.zeros_like, params)
+        (g, loss), metrics = jax.lax.scan(micro, (g0, 0.0), mbs)
+        g = jax.tree.map(lambda x: x / n_microbatches, g)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss / n_microbatches, metrics, g
+
+    def step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        if comp_cfg.kind != "none":
+            grads, residuals = compress(grads, state["residuals"], comp_cfg)
+        params, opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], opt_cfg
+        )
+        new_state = {"params": params, "opt": opt}
+        if comp_cfg.kind != "none":
+            new_state["residuals"] = residuals
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return init_state, step
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    step_fn: Callable  # jitted (state, batch) -> (state, metrics)
+    data_iter: object  # iterator of batches
+    checkpointer: Optional[object] = None  # AsyncCheckpointer
+    checkpoint_every: int = 100
+    monitor: StragglerMonitor = dataclasses.field(default_factory=StragglerMonitor)
+    heartbeat: Heartbeat = dataclasses.field(default_factory=Heartbeat)
+    host_id: int = 0
+    log_every: int = 10
+    log_fn: Callable = print
+
+    def run(self, state, n_steps: int, start_step: int = 0):
+        history = []
+        for step in range(start_step, n_steps):
+            t0 = time.monotonic()
+            batch = next(self.data_iter)
+            state, metrics = self.step_fn(state, batch)
+            dt = time.monotonic() - t0
+            self.monitor.record(self.host_id, dt)
+            self.heartbeat.beat(self.host_id)
+            if (step + 1) % self.log_every == 0:
+                loss = float(metrics["loss"])
+                history.append((step + 1, loss, dt))
+                self.log_fn(f"step {step + 1}: loss={loss:.4f} ({dt * 1e3:.0f} ms)")
+            if self.checkpointer and (step + 1) % self.checkpoint_every == 0:
+                self.checkpointer.save(step + 1, state)
+        return state, history

@@ -1,0 +1,54 @@
+"""Dry-run machinery: mesh construction + one real cell compile (subprocess,
+since the 512-device XLA flag must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=420, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_production_mesh_shapes():
+    out = _run(
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=512'\n"
+        "from repro.launch.mesh import make_production_mesh\n"
+        "m = make_production_mesh()\n"
+        "assert m.shape == {'data': 16, 'model': 16}, m.shape\n"
+        "mp = make_production_mesh(multi_pod=True)\n"
+        "assert mp.shape == {'pod': 2, 'data': 16, 'model': 16}, mp.shape\n"
+        "print('MESH_OK')\n"
+    )
+    assert "MESH_OK" in out
+
+
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_dryrun_cheapest_cell_compiles(multi_pod):
+    """wide-deep retrieval_cand: full lower+compile on both meshes."""
+    out = _run(
+        "from repro.launch.dryrun import run_cell\n"
+        f"rec = run_cell('wide-deep', 'retrieval_cand', multi_pod={multi_pod},"
+        " skip_analysis=True)\n"
+        "import json; print('REC=' + json.dumps(rec['status']))\n"
+    )
+    assert 'REC="ok"' in out
+
+
+def test_dryrun_skip_cells_raise():
+    from repro import configs as C
+
+    with pytest.raises(ValueError, match="documented skip"):
+        C.input_specs("grok-1-314b", "long_500k")

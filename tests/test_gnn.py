@@ -1,0 +1,201 @@
+"""GNN zoo: forward shapes, gradients, equivariance, sampler-to-block path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import generators
+from repro.models.gnn import GNNConfig, apply_gnn, gnn_loss, init_gnn
+from repro.models.gnn.wigner import (
+    build_wigner_lut, direction_bins, m_index_sets, real_sph_harm,
+)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    g = generators.citation_graph(120, avg_deg=5, d_feat=24, seed=2)
+    src, dst = g.edge_list()
+    return {
+        "node_feat": jnp.asarray(g.node_feat),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "edge_mask": jnp.ones(len(src), bool),
+        "targets": jnp.zeros((120, 6)),
+    }
+
+
+@pytest.mark.parametrize("arch", ["gin", "meshgraphnet", "graphcast"])
+def test_gnn_forward_and_grad(arch, small_graph):
+    d_out = 24 if arch == "graphcast" else 6
+    cfg = GNNConfig(
+        name=arch, arch=arch, n_layers=3, d_hidden=32, d_in=24, d_out=d_out,
+        n_vars=24,
+    )
+    p = init_gnn(jax.random.PRNGKey(0), cfg)
+    inputs = dict(small_graph)
+    if arch == "graphcast":
+        inputs["targets"] = jnp.zeros((120, 24))
+    out = apply_gnn(p, cfg, inputs)
+    assert out.shape == (120, d_out)
+    assert not bool(jnp.isnan(out).any())
+    g = jax.grad(lambda pp: gnn_loss(pp, cfg, inputs))(p)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_padded_edges_are_no_ops(small_graph):
+    cfg = GNNConfig(name="gin", arch="gin", n_layers=2, d_hidden=16, d_in=24, d_out=6)
+    p = init_gnn(jax.random.PRNGKey(0), cfg)
+    out1 = apply_gnn(p, cfg, small_graph)
+    n = small_graph["node_feat"].shape[0]
+    e = small_graph["edge_src"].shape[0]
+    padded = dict(
+        small_graph,
+        edge_src=jnp.concatenate([small_graph["edge_src"], jnp.full(13, n, jnp.int32)]),
+        edge_dst=jnp.concatenate([small_graph["edge_dst"], jnp.full(13, n, jnp.int32)]),
+        edge_mask=jnp.concatenate([small_graph["edge_mask"], jnp.zeros(13, bool)]),
+    )
+    out2 = apply_gnn(p, cfg, padded)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+# ------------------------------------------------------------- equiformer --
+def test_sph_harm_orthonormal():
+    rng = np.random.default_rng(0)
+    s = rng.standard_normal((100_000, 3))
+    s /= np.linalg.norm(s, axis=1, keepdims=True)
+    Y = real_sph_harm(3, s)
+    G = (Y.T @ Y) / len(s) * 4 * np.pi
+    assert np.abs(G - np.eye(16)).max() < 0.02
+
+
+def test_wigner_blocks_orthogonal_and_rotate_to_z():
+    lut = build_wigner_lut(2, n_theta=8, n_phi=16, n_samples=256)
+    yz = real_sph_harm(2, np.array([[0, 0, 1.0]]))[0]
+    for b in (0, 37, 100):
+        D = lut[b]
+        assert np.abs(D @ D.T - np.eye(9)).max() < 1e-5
+        th = (b // 16 + 0.5) / 8 * np.pi
+        ph = ((b % 16) + 0.5) / 16 * 2 * np.pi - np.pi
+        d = np.array([[np.sin(th) * np.cos(ph), np.sin(th) * np.sin(ph), np.cos(th)]])
+        yd = real_sph_harm(2, d)[0]
+        assert np.abs(D @ yd - yz).max() < 1e-6
+
+
+def test_m_index_sets():
+    ms = m_index_sets(3, 2)
+    assert ms[0][0].tolist() == [0, 2, 6, 12]  # (l, m=0) at l^2+l
+    assert ms[1][0].tolist() == [3, 7, 13]
+    assert ms[1][1].tolist() == [1, 5, 11]
+    assert len(ms[2][0]) == 2
+
+
+@pytest.fixture(scope="module")
+def equi_setup():
+    g = generators.citation_graph(80, avg_deg=4, d_feat=16, seed=3)
+    src, dst = g.edge_list()
+    rng = np.random.default_rng(0)
+    pos = rng.standard_normal((80, 3)).astype(np.float32)
+    cfg = GNNConfig(
+        name="eq", arch="equiformer_v2", n_layers=2, d_hidden=16, d_in=16,
+        d_out=4, l_max=2, m_max=1, n_heads=4,
+    )
+    lut = jnp.asarray(build_wigner_lut(2, n_theta=32, n_phi=64, n_samples=256))
+    inputs = {
+        "node_feat": jnp.asarray(g.node_feat),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "edge_mask": jnp.ones(len(src), bool),
+        "pos": jnp.asarray(pos),
+        "wigner_lut": lut,
+        "targets": jnp.zeros((80, 4)),
+    }
+    params = init_gnn(jax.random.PRNGKey(1), cfg)
+    return cfg, params, inputs, pos
+
+
+def test_equiformer_forward_and_grad(equi_setup):
+    cfg, params, inputs, _ = equi_setup
+    out = apply_gnn(params, cfg, inputs)
+    assert out.shape == (80, 4) and not bool(jnp.isnan(out).any())
+    g = jax.grad(lambda p: gnn_loss(p, cfg, inputs))(params)
+    assert np.isfinite(sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g)))
+
+
+def test_equiformer_rotation_invariance_improves_with_bins(equi_setup):
+    cfg, params, inputs, pos = equi_setup
+    th = 0.9
+    R = np.array(
+        [[np.cos(th), -np.sin(th), 0], [np.sin(th), np.cos(th), 0], [0, 0, 1]],
+        dtype=np.float32,
+    )
+    o1 = apply_gnn(params, cfg, inputs)
+    o2 = apply_gnn(params, cfg, dict(inputs, pos=jnp.asarray(pos @ R.T)))
+    rel_fine = float(jnp.max(jnp.abs(o1 - o2))) / float(jnp.max(jnp.abs(o1)))
+    lut_coarse = jnp.asarray(build_wigner_lut(2, n_theta=8, n_phi=16, n_samples=256))
+    o1c = apply_gnn(params, cfg, dict(inputs, wigner_lut=lut_coarse))
+    o2c = apply_gnn(
+        params, cfg, dict(inputs, wigner_lut=lut_coarse, pos=jnp.asarray(pos @ R.T))
+    )
+    rel_coarse = float(jnp.max(jnp.abs(o1c - o2c))) / float(jnp.max(jnp.abs(o1c)))
+    assert rel_fine < 0.15
+    assert rel_fine < rel_coarse  # quantization error falls with bin count
+
+
+def test_equiformer_edge_chunking_invariance(equi_setup):
+    cfg, params, inputs, _ = equi_setup
+    from repro.models.gnn.equiformer import apply_equiformer
+
+    e = inputs["edge_src"].shape[0]
+    # pad edges to a multiple of 4 chunks
+    import math
+
+    pe = math.ceil(e / 4) * 4
+    pad = pe - e
+    n = inputs["node_feat"].shape[0]
+    inp = dict(
+        inputs,
+        edge_src=jnp.concatenate([inputs["edge_src"], jnp.full(pad, n, jnp.int32)]),
+        edge_dst=jnp.concatenate([inputs["edge_dst"], jnp.full(pad, n, jnp.int32)]),
+        edge_mask=jnp.concatenate([inputs["edge_mask"], jnp.zeros(pad, bool)]),
+    )
+    o1 = apply_equiformer(params, cfg, inp, edge_chunk=pe)
+    o2 = apply_equiformer(params, cfg, inp, edge_chunk=pe // 4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------- sampler-to-block path --
+def test_sampled_block_trains_gnn():
+    from repro.graph import NeighborSampler
+
+    g = generators.citation_graph(400, avg_deg=6, d_feat=16, seed=5)
+    s = NeighborSampler(g, (4, 3), seed=0)
+    blk = s.sample(np.arange(16))
+    # convert hops to edge list over union positions
+    srcs, dsts = [], []
+    # hop arrays give neighbor positions; frontier positions for hop h:
+    frontier_pos = blk.seeds_pos
+    for h, m in zip(blk.hops, blk.hop_masks):
+        fp = np.repeat(frontier_pos, h.shape[1]).reshape(h.shape)
+        srcs.append(h[m])
+        dsts.append(fp[m])
+        frontier_pos = h.reshape(-1)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    cap = len(blk.nodes)
+    feat = np.zeros((cap, 16), np.float32)
+    feat[: blk.n_valid] = g.node_feat[blk.nodes[: blk.n_valid]]
+    cfg = GNNConfig(name="gin", arch="gin", n_layers=2, d_hidden=16, d_in=16, d_out=4)
+    p = init_gnn(jax.random.PRNGKey(0), cfg)
+    mask = np.zeros(cap, np.float32)
+    mask[blk.seeds_pos] = 1.0
+    inputs = {
+        "node_feat": jnp.asarray(feat),
+        "edge_src": jnp.asarray(src.astype(np.int32)),
+        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+        "edge_mask": jnp.ones(len(src), bool),
+        "targets": jnp.zeros((cap, 4)),
+        "node_mask": jnp.asarray(mask),
+    }
+    loss = gnn_loss(p, cfg, inputs)
+    assert np.isfinite(float(loss))

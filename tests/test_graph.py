@@ -1,0 +1,87 @@
+"""Graph substrate: CSR/ELL/batching/sampler (+ hypothesis invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import CSRGraph, NeighborSampler, batch_graphs, csr_to_ell, generators
+
+
+def test_csr_roundtrip():
+    g = generators.citation_graph(200, avg_deg=6, seed=0)
+    src, dst = g.edge_list()
+    g2 = CSRGraph.from_edges(src, dst, g.num_nodes)
+    assert g2.num_edges == g.num_edges
+    for u in (0, 5, 199):
+        assert sorted(g2.neighbors(u)) == sorted(g.neighbors(u))
+
+
+def test_ell_preserves_neighbors():
+    g = generators.citation_graph(150, avg_deg=4, seed=1)
+    ell = csr_to_ell(g)
+    deg = g.degrees()
+    nbr = np.asarray(ell.nbr)
+    msk = np.asarray(ell.nbr_mask)
+    for u in range(0, 150, 17):
+        got = sorted(nbr[u][msk[u]].tolist())
+        assert got == sorted(g.neighbors(u).tolist())
+        assert msk[u].sum() == deg[u]
+    # sentinel padding everywhere else
+    assert (nbr[~msk] == g.num_nodes).all()
+
+
+def test_ell_truncation():
+    g = generators.citation_graph(150, avg_deg=8, seed=2)
+    ell = csr_to_ell(g, max_deg=4, pad_to_multiple=1)
+    assert ell.nbr.shape[1] == 4
+    assert int(ell.degrees().max()) <= 4
+
+
+def test_batch_graphs_block_diagonal():
+    gs = generators.molecule_graphs(n_graphs=5, n_nodes=10, n_edges=20, seed=0)
+    big, gids = batch_graphs(gs)
+    assert big.num_nodes == 50
+    assert len(gids) == 50 and gids.max() == 4
+    src, dst = big.edge_list()
+    # no cross-graph edges
+    assert (gids[src] == gids[dst]).all()
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    g = generators.citation_graph(500, avg_deg=8, seed=3)
+    s = NeighborSampler(g, (5, 3), seed=0)
+    seeds = np.arange(32)
+    blk = s.sample(seeds)
+    assert blk.hops[0].shape == (32, 5)
+    assert blk.hops[1].shape == (160, 3)
+    assert blk.n_valid <= len(blk.nodes)
+    cap = len(blk.nodes)
+    # every sampled position points to a real union node or the sentinel
+    for h, m in zip(blk.hops, blk.hop_masks):
+        assert (h[m] < blk.n_valid).all()
+        assert (h[~m] == cap).all()
+    # sampled neighbors really are graph neighbors
+    nodes = blk.nodes
+    for i in range(5):
+        u = seeds[i]
+        nbrs = set(g.neighbors(u).tolist())
+        for pos, ok in zip(blk.hops[0][i], blk.hop_masks[0][i]):
+            if ok:
+                assert int(nodes[pos]) in nbrs
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(5, 60),
+    deg=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+)
+def test_ell_degree_invariant(n, deg, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=n * deg)
+    dst = rng.integers(0, n, size=n * deg)
+    g = CSRGraph.from_edges(src, dst, n)
+    ell = csr_to_ell(g)
+    assert int(np.asarray(ell.degrees()).sum()) == g.num_edges
+    nbr = np.asarray(ell.nbr)
+    msk = np.asarray(ell.nbr_mask)
+    assert (nbr[msk] < n).all() and (nbr[~msk] == n).all()

@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (deliverable f): instantiate the REDUCED
+config of each assigned arch and run one forward/train step on CPU,
+asserting output shapes + no NaNs.  Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models.gnn import apply_gnn, gnn_loss, init_gnn
+from repro.models.gnn.wigner import build_wigner_lut
+from repro.models.recsys import wide_deep as wd
+from repro.models.transformer import model as tm
+
+LM_ARCHS = [a for a in C.ARCH_IDS if C.get_config(a).family == "lm"]
+GNN_ARCHS = [a for a in C.ARCH_IDS if C.get_config(a).family == "gnn"]
+
+
+def test_registry_complete():
+    assert len(C.ARCH_IDS) == 10
+    fams = [C.get_config(a).family for a in C.ARCH_IDS]
+    assert fams.count("lm") == 5 and fams.count("gnn") == 4
+    assert fams.count("recsys") == 1
+
+
+def test_full_configs_match_assignment():
+    c = C.get_config("starcoder2-3b").model_cfg
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        30, 3072, 24, 2, 12288, 49152,
+    ) and c.sliding_window == 4096
+    c = C.get_config("deepseek-7b").model_cfg
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        30, 4096, 32, 32, 11008, 102400,
+    )
+    c = C.get_config("deepseek-coder-33b").model_cfg
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        62, 7168, 56, 8, 19200, 32256,
+    )
+    c = C.get_config("grok-1-314b").model_cfg
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == (
+        64, 6144, 48, 8, 131072,
+    ) and (c.moe.n_experts, c.moe.top_k, c.moe.d_ff) == (8, 2, 32768)
+    c = C.get_config("granite-moe-1b-a400m").model_cfg
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == (
+        24, 1024, 16, 8, 49155,
+    ) and (c.moe.n_experts, c.moe.top_k, c.moe.d_ff) == (32, 8, 512)
+    c = C.get_config("graphcast").model_cfg
+    assert (c.n_layers, c.d_hidden, c.mesh_refinement, c.n_vars) == (16, 512, 6, 227)
+    c = C.get_config("meshgraphnet").model_cfg
+    assert (c.n_layers, c.d_hidden, c.mlp_layers) == (15, 128, 2)
+    c = C.get_config("gin-tu").model_cfg
+    assert (c.n_layers, c.d_hidden) == (5, 64)
+    c = C.get_config("equiformer-v2").model_cfg
+    assert (c.n_layers, c.d_hidden, c.l_max, c.m_max, c.n_heads) == (12, 128, 6, 2, 8)
+    c = C.get_config("wide-deep").model_cfg
+    assert (c.n_sparse, c.embed_dim, tuple(c.mlp)) == (40, 32, (1024, 512, 256))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_and_serve(arch):
+    cfg = C.get_config(arch).reduced_cfg
+    params = tm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    mask = jnp.ones((2, 32), bool)
+    loss, metrics = tm.lm_loss(params, toks, mask, cfg)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: tm.lm_loss(p, toks, mask, cfg)[0])(params)
+    assert all(np.isfinite(float(jnp.abs(x).sum())) for x in jax.tree.leaves(g))
+    # serve path
+    cache_len = cfg.sliding_window or 32
+    logits, cache = tm.prefill(params, toks[:, :16], jnp.array([16, 16]), cfg, cache_len)
+    assert logits.shape == (2, cfg.vocab) and not bool(jnp.isnan(logits).any())
+    nxt, cache = tm.serve_step(params, cache, jnp.argmax(logits, -1).astype(jnp.int32), cfg)
+    assert nxt.shape == (2,)
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch):
+    spec = C.get_config(arch)
+    cfg = spec.reduced_cfg
+    from repro.graph import generators
+
+    g = generators.citation_graph(60, avg_deg=4, d_feat=cfg.d_in, seed=0)
+    src, dst = g.edge_list()
+    inputs = {
+        "node_feat": jnp.asarray(g.node_feat),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "edge_mask": jnp.ones(len(src), bool),
+        "targets": jnp.zeros((60, cfg.d_out)),
+    }
+    if cfg.arch == "equiformer_v2":
+        inputs["pos"] = jnp.asarray(
+            np.random.default_rng(0).standard_normal((60, 3)).astype(np.float32)
+        )
+        inputs["wigner_lut"] = jnp.asarray(
+            build_wigner_lut(cfg.l_max, n_theta=8, n_phi=16, n_samples=128)
+        )
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    out = apply_gnn(params, cfg, inputs)
+    assert out.shape == (60, cfg.d_out) and not bool(jnp.isnan(out).any())
+    loss, grads = jax.value_and_grad(lambda p: gnn_loss(p, cfg, inputs))(params)
+    assert np.isfinite(float(loss))
+
+
+def test_recsys_smoke_train_step():
+    cfg = C.get_config("wide-deep").reduced_cfg
+    params = wd.init_wide_deep(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    b = 16
+    dense = jnp.asarray(rng.standard_normal((b, cfg.n_dense)), jnp.float32)
+    ids = rng.integers(0, cfg.rows_per_field, (b, cfg.n_sparse, cfg.bag_size))
+    ids += np.arange(cfg.n_sparse)[None, :, None] * cfg.rows_per_field
+    ids[rng.random(ids.shape) < 0.2] = -1
+    labels = jnp.asarray(rng.integers(0, 2, b), jnp.float32)
+    loss = wd.wide_deep_loss(params, cfg, dense, jnp.asarray(ids), labels)
+    assert np.isfinite(float(loss))
+    lg = wd.wide_deep_logits(params, cfg, dense, jnp.asarray(ids))
+    assert lg.shape == (b,) and not bool(jnp.isnan(lg).any())
+    s, i = wd.retrieval_scores(
+        jnp.asarray(rng.standard_normal((1, cfg.mlp[-1])), jnp.float32),
+        jnp.asarray(rng.standard_normal((4096, cfg.mlp[-1])), jnp.float32),
+        k=10,
+    )
+    assert s.shape == (1, 10)
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_input_specs_abstract(arch):
+    spec = C.get_config(arch)
+    for shape_name, shape in spec.shapes.items():
+        if shape.kind == "skip":
+            assert spec.family == "lm"
+            continue
+        specs = C.input_specs(arch, shape_name, abstract=True)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_skips_documented():
+    skips = [
+        a for a in C.ARCH_IDS
+        if C.get_config(a).family == "lm"
+        and C.get_config(a).shapes["long_500k"].kind == "skip"
+    ]
+    assert sorted(skips) == [
+        "deepseek-7b", "deepseek-coder-33b", "granite-moe-1b-a400m", "grok-1-314b",
+    ]
+    assert C.get_config("starcoder2-3b").shapes["long_500k"].kind == "long_decode"

@@ -1,0 +1,106 @@
+"""Training substrate: optimizer, microbatching equivalence, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (
+    CompressionConfig, compress, init_residuals,
+)
+from repro.training import AdamWConfig, adamw_init, adamw_update, make_train_step
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _setup(seed=0, n=64, d=8):
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal((d, 1))
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = (x @ w_true).astype(np.float32)
+    params = {"w": jnp.zeros((d, 1))}
+    return params, {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def test_adamw_converges():
+    params, batch = _setup()
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1, total_steps=500)
+    init_s, step = make_train_step(_quad_loss, cfg)
+    state = init_s(params)
+    step = jax.jit(step)
+    for _ in range(300):
+        state, m = step(state, batch)
+    assert float(m["loss"]) < 1e-2
+
+
+def test_microbatch_grads_match_full_batch():
+    params, batch = _setup(n=32)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    _, step1 = make_train_step(_quad_loss, cfg, n_microbatches=1)
+    _, step4 = make_train_step(_quad_loss, cfg, n_microbatches=4)
+    init_s, _ = make_train_step(_quad_loss, cfg)
+    s1, _ = step1(init_s(params), batch)
+    s4, _ = step4(init_s(params), batch)
+    np.testing.assert_allclose(
+        np.asarray(s1["params"]["w"]), np.asarray(s4["params"]["w"]), rtol=1e-5
+    )
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    cfg = AdamWConfig(grad_clip=1.0, lr=1.0, weight_decay=0.0)
+    opt = adamw_init(params, cfg)
+    _, _, metrics = adamw_update(grads, opt, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_bf16_state_dtype():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    opt = adamw_init(params, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+
+
+# ------------------------------------------------------------ compression --
+def test_int8_error_feedback_preserves_signal():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    cfg = CompressionConfig(kind="int8")
+    res = init_residuals({"g": g})
+    total = jnp.zeros_like(g)
+    for _ in range(20):
+        comp, res = compress({"g": g}, res, cfg)
+        total = total + comp["g"]
+    # avg compressed grad ~= true grad (error feedback is unbiased long-run)
+    np.testing.assert_allclose(np.asarray(total / 20), np.asarray(g), atol=0.05)
+
+
+def test_topk_compression_sparsity():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((1000,)), jnp.float32)
+    cfg = CompressionConfig(kind="topk", topk_frac=0.01)
+    comp, res = compress({"g": g}, init_residuals({"g": g}), cfg)
+    nz = int((comp["g"] != 0).sum())
+    assert nz <= 20  # ~1% kept (ties allowed)
+    # residual holds the dropped mass
+    np.testing.assert_allclose(
+        np.asarray(comp["g"] + res["g"]), np.asarray(g), atol=1e-6
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), kind=st.sampled_from(["int8", "topk"]))
+def test_compression_error_feedback_invariant(seed, kind):
+    """compressed + residual_new == grad + residual_old (mass conservation)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    r = jnp.asarray(rng.standard_normal((128,)) * 0.1, jnp.float32)
+    cfg = CompressionConfig(kind=kind, topk_frac=0.05)
+    comp, res = compress({"g": g}, {"g": r}, cfg)
+    np.testing.assert_allclose(
+        np.asarray(comp["g"] + res["g"]), np.asarray(g + r), atol=1e-4
+    )
