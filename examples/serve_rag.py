@@ -1,8 +1,10 @@
-"""Serve a small RAG-LM with batched requests (continuous batching).
+"""Serve a small RAG-LM end to end with the fused engine.
 
-Queries hit the RGL retrieval pipeline, get linearized into prompts, and
-stream through the slot-based ServeEngine — the deployment shape of the
-paper's Graph Q&A application.
+Raw (query embedding, query text) requests go through the whole RGL stack —
+index -> seed retrieval -> subgraph -> dynamic filter -> tokenization ->
+batched prefill -> continuous-batching decode — inside one RAGServeEngine.
+Retrieval is batched across each admission wave and cached (LRU on quantized
+query embeddings), so repeated queries skip index + BFS entirely.
 
     PYTHONPATH=src python examples/serve_rag.py --requests 12
 """
@@ -18,7 +20,7 @@ from repro.core import (
 )
 from repro.models.transformer import TransformerConfig, model as tm
 from repro.graph import csr_to_ell, generators
-from repro.serving import Request, ServeEngine
+from repro.serving import RAGRequest, RAGServeEngine
 
 
 def main():
@@ -26,6 +28,8 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max_new", type=int, default=16)
+    ap.add_argument("--repeat", type=int, default=0,
+                    help="extra duplicate requests (exercise the cache)")
     args = ap.parse_args()
 
     g = generators.citation_graph(1000, avg_deg=8, seed=0)
@@ -45,26 +49,34 @@ def main():
         d_head=16, d_ff=256, vocab=vocab.size, dtype="float32",
     )
     params = tm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, slots=args.slots, cache_len=224)
+    eng = RAGServeEngine(pipe, params, cfg, slots=args.slots, cache_len=224)
 
-    # batch-retrieve contexts for all requests, then stream them in
     rng = np.random.default_rng(0)
     q_ids = rng.choice(1000, size=args.requests, replace=False)
-    qe = emb[jnp.asarray(q_ids)]
-    sub, _ = pipe.retrieve(qe)
-    from repro.core.tokenization import subgraph_texts
-
-    ctxs = subgraph_texts(sub, g.node_text)
+    emb_np = np.asarray(emb)
     t0 = time.time()
-    for r, qi in enumerate(q_ids):
-        ids, mask = tok.linearize(" ".join(g.node_text[qi].split()[:4]), ctxs[r])
-        eng.submit(Request(uid=int(qi), prompt_ids=ids[mask],
-                           max_new_tokens=args.max_new))
+    for u, qi in enumerate(q_ids):
+        eng.submit(RAGRequest(
+            uid=int(qi), query_emb=emb_np[qi],
+            query_text=" ".join(g.node_text[qi].split()[:4]),
+            max_new_tokens=args.max_new,
+        ))
+    for _ in range(args.repeat):  # duplicates — served from the cache
+        qi = q_ids[int(rng.integers(len(q_ids)))]
+        eng.submit(RAGRequest(
+            uid=10_000 + int(qi), query_emb=emb_np[qi],
+            query_text=" ".join(g.node_text[qi].split()[:4]),
+            max_new_tokens=args.max_new,
+        ))
     done = eng.run_to_completion()
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
+    s = eng.stats()
     print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s, {args.slots} slots)")
+    print(f"retrieval: {s['retrieval_batches']} batched calls for "
+          f"{s['retrieved_queries']} queries in {s['retrieval_seconds']:.2f}s; "
+          f"cache {s['hits']} hits / {s['misses']} misses")
     id2w = {v + 6: k for k, v in vocab.word_to_id.items()}
     sample = done[0]
     words = " ".join(id2w.get(t, "?") for t in sample.out_tokens[:10])

@@ -66,6 +66,34 @@ class RGLPipeline:
         sub = self.filter(sub, query_emb, seeds)
         return sub, seeds
 
+    def retrieve_many(
+        self, query_embs, *, batch_size: Optional[int] = None, encoder=None
+    ) -> tuple[Subgraph, jnp.ndarray, int]:
+        """Fixed-shape batched retrieval for serving admission.
+
+        Pads the query batch up to ``batch_size`` rows (zeros) so every
+        serving-step admission reuses one jitted retrieval trace regardless of
+        how many requests arrived — the paper's amortization mechanism applied
+        at serve time.  All retrieval stages are row-independent, so padding
+        rows never perturb real results.
+
+        Returns ``(sub, seeds, n_valid)`` where ``sub``/``seeds`` have leading
+        dim ``batch_size`` and only the first ``n_valid`` rows are meaningful.
+        """
+        q = np.asarray(query_embs, np.float32)
+        if q.ndim == 1:
+            q = q[None]
+        n_valid = q.shape[0]
+        bs = batch_size or n_valid
+        if n_valid > bs:
+            raise ValueError(f"{n_valid} queries > batch_size {bs}")
+        if n_valid < bs:
+            q = np.concatenate(
+                [q, np.zeros((bs - n_valid, q.shape[1]), np.float32)], axis=0
+            )
+        sub, seeds = self.retrieve(jnp.asarray(q), encoder=encoder)
+        return sub, seeds, n_valid
+
     def tokenize(self, query_texts, sub: Subgraph):
         assert self.tokenizer is not None and self.node_text is not None
         texts = tokenization.subgraph_texts(sub, self.node_text)

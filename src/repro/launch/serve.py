@@ -1,32 +1,34 @@
-"""Serving launcher: --arch <id> spins up the slot-based engine with the
-arch's reduced config on CPU (full configs serve via the dry-run sharding
-on real hardware).
+"""Serving launcher: --arch <id> spins up the serving engine with the arch's
+reduced config on CPU (full configs serve via the dry-run sharding on real
+hardware).
+
+Two modes:
+
+* token mode (default) — random already-tokenized prompts through the
+  slot-based ``ServeEngine`` (generation stage only).
+* ``--rag`` — the fused end-to-end path: a synthetic citation graph + vector
+  index feed raw (query embedding, query text) requests through
+  ``RAGServeEngine`` (batched retrieval admission + retrieval cache + decode).
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --rag
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as C
 from repro.models.transformer import model as tm
-from repro.serving import Request, ServeEngine
+from repro.serving import RAGRequest, RAGServeEngine, Request, ServeEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    lm_archs = [a for a in C.ARCH_IDS if C.get_config(a).family == "lm"]
-    ap.add_argument("--arch", required=True, choices=lm_archs)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max_new", type=int, default=12)
-    args = ap.parse_args()
-
-    cfg = C.get_config(args.arch).reduced_cfg
+def _serve_tokens(cfg, args) -> None:
     params = tm.init_params(jax.random.PRNGKey(0), cfg)
     cache_len = cfg.sliding_window or 128
     eng = ServeEngine(params, cfg, slots=args.slots, cache_len=cache_len)
@@ -44,6 +46,71 @@ def main():
     toks = sum(len(r.out_tokens) for r in done)
     print(f"[{args.arch}] served {len(done)} requests / {toks} tokens "
           f"in {dt:.1f}s ({toks / dt:.1f} tok/s)")
+
+
+def _serve_rag(cfg, args) -> None:
+    from repro.core import (
+        BruteIndex, GraphTokenizer, PipelineConfig, RGLPipeline, Vocab,
+    )
+    from repro.graph import csr_to_ell, generators
+
+    g = generators.citation_graph(args.nodes, avg_deg=8, seed=0)
+    ell = csr_to_ell(g)
+    emb = jnp.asarray(g.node_feat)
+    vocab = Vocab.build(g.node_text)
+    # the arch LM decodes the graph tokenizer's vocabulary
+    cfg = dataclasses.replace(cfg, vocab=vocab.size)
+    tok = GraphTokenizer(vocab, max_len=96, node_budget=8)
+    pipe = RGLPipeline(
+        graph=ell, index=BruteIndex.build(emb), node_emb=emb, tokenizer=tok,
+        node_text=g.node_text,
+        config=PipelineConfig(strategy="bfs", k_seeds=3, max_nodes=16,
+                              filter_budget=6),
+    )
+    params = tm.init_params(jax.random.PRNGKey(0), cfg)
+    # the linearized graph prompt (<= tokenizer max_len) plus generated
+    # tokens must fit the arena; sliding_window only bounds attention reach
+    cache_len = max(cfg.sliding_window or 0, 96 + args.max_new + 1)
+    eng = RAGServeEngine(pipe, params, cfg, slots=args.slots,
+                         cache_len=cache_len)
+    rng = np.random.default_rng(0)
+    q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
+    emb_np = np.asarray(emb)
+    t0 = time.time()
+    for u, qi in enumerate(q_ids):
+        eng.submit(RAGRequest(
+            uid=u, query_emb=emb_np[qi],
+            query_text=" ".join(g.node_text[qi].split()[:4]),
+            max_new_tokens=args.max_new,
+        ))
+    done = eng.run_to_completion()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    s = eng.stats()
+    print(f"[{args.arch}] RAG-served {len(done)} requests / {toks} tokens "
+          f"in {dt:.1f}s ({toks / dt:.1f} tok/s); "
+          f"{s['retrieval_batches']} retrieval batches, "
+          f"cache {s['hits']}/{s['hits'] + s['misses']} hits")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    lm_archs = [a for a in C.ARCH_IDS if C.get_config(a).family == "lm"]
+    ap.add_argument("--arch", required=True, choices=lm_archs)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max_new", type=int, default=12)
+    ap.add_argument("--rag", action="store_true",
+                    help="serve end-to-end through the fused RAG engine")
+    ap.add_argument("--nodes", type=int, default=1000,
+                    help="synthetic graph size for --rag")
+    args = ap.parse_args()
+
+    cfg = C.get_config(args.arch).reduced_cfg
+    if args.rag:
+        _serve_rag(cfg, args)
+    else:
+        _serve_tokens(cfg, args)
 
 
 if __name__ == "__main__":

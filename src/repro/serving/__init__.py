@@ -1,3 +1,9 @@
 from repro.serving.engine import ServeEngine, Request
+from repro.serving.cache import RetrievalCache, CachedRetrieval
+from repro.serving.rag_engine import RAGServeEngine, RAGRequest
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = [
+    "ServeEngine", "Request",
+    "RetrievalCache", "CachedRetrieval",
+    "RAGServeEngine", "RAGRequest",
+]

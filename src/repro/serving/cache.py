@@ -1,0 +1,79 @@
+"""Retrieval cache for the fused RAG serving engine.
+
+An LRU map from *quantized query embedding* to the finished retrieval result
+(filtered subgraph membership + seed ids).  Quantization (``round(emb / eps)``)
+makes near-duplicate queries — repeated questions, embedding jitter below
+``eps`` — collapse onto one key, so a hit skips the entire index + BFS +
+filter stack.  Entries are host-side numpy (small: O(budget) ints per query),
+so the cache never holds device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CachedRetrieval:
+    """One query's retrieval output, materialized on host."""
+
+    nodes: np.ndarray  # (M,) int32 subgraph node ids (sentinel where ~mask)
+    mask: np.ndarray  # (M,) bool
+    dist: np.ndarray  # (M,) int32 hop distances
+    seeds: np.ndarray  # (S,) int32 seed node ids
+
+
+class RetrievalCache:
+    """LRU cache keyed on quantized query embeddings, with hit/miss counters.
+
+    ``get`` counts a hit or miss and refreshes recency; ``put`` inserts and
+    evicts the least-recently-used entry beyond ``capacity``.  ``capacity <= 0``
+    disables caching (every lookup is a miss, nothing is stored).
+    """
+
+    def __init__(self, capacity: int = 256, quant_eps: float = 1e-3):
+        self.capacity = capacity
+        self.quant_eps = quant_eps
+        self._data: OrderedDict[bytes, CachedRetrieval] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def key(self, query_emb) -> bytes:
+        q = np.asarray(query_emb, np.float32).ravel()
+        return np.round(q / self.quant_eps).astype(np.int32).tobytes()
+
+    def get(self, query_emb) -> CachedRetrieval | None:
+        k = self.key(query_emb)
+        entry = self._data.get(k)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._data.move_to_end(k)
+        self.hits += 1
+        return entry
+
+    def put(self, query_emb, entry: CachedRetrieval) -> None:
+        if self.capacity <= 0:
+            return
+        k = self.key(query_emb)
+        self._data[k] = entry
+        self._data.move_to_end(k)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "size": len(self._data),
+            "hit_rate": self.hits / total if total else 0.0,
+        }

@@ -2,16 +2,25 @@
 
 vLLM-style scheduling adapted to TPU constraints (static shapes): a fixed
 (B, cache_len) KV arena; each of the B slots holds one in-flight request.
-Every engine step runs ONE jitted decode step for all slots; finished or
-empty slots are refilled by (re-)prefilling the pending queue — prefill for
-slot i writes its cache rows via a masked batched update, never reshaping.
+Every engine step runs ONE jitted decode step for all slots.  Admission is
+batched too: all free slots are refilled together by a single masked batched
+prefill — prompts are padded to a shared length bucket, run through one
+``tm.prefill`` call, and the resulting cache rows are merged into the arena
+with one jitted masked update (never reshaping, never per-slot dispatch).
 
-This is the RGL generation stage's server: prompts arrive already tokenized
-by the pipeline (retrieval happens upstream, possibly on other hosts).
+Length bucketing keeps recompilation bounded: the prefill trace is specialized
+on (slots, bucket) only, so at most O(log cache_len) prefill programs exist
+over the lifetime of the engine.
+
+This engine serves already-tokenized prompts.  For the fused
+retrieval-to-generation front-end (the RGL "unified system" claim), see
+:class:`repro.serving.rag_engine.RAGServeEngine`, which batches graph
+retrieval across admissions and feeds this engine.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Optional
 
@@ -32,7 +41,63 @@ class Request:
     done: bool = False
 
 
+def _bucket_len(n: int, cache_len: int, floor: int = 8) -> int:
+    """Smallest power-of-two >= n (>= floor), capped at cache_len."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return min(b, cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cache_len"))
+def _prefill_batch(params, toks, tl, cfg: TransformerConfig, cache_len: int):
+    """Module-level jit so traces are shared across engine instances —
+    constructing a fresh engine must not recompile the serving programs."""
+    return tm.prefill(params, toks, tl, cfg, cache_len)
+
+
+@jax.jit
+def _merge_admitted(arena: tm.KVCache, new: tm.KVCache, cur_tok, first,
+                    rows, newly):
+    """Masked merge of freshly prefilled rows into the slot arena.
+
+    ``rows[i]`` names the prefill-batch row feeding slot i; ``newly[i]`` masks
+    which slots actually admit.  Elementwise select => shards cleanly.
+    """
+
+    def mix_b1(a, b):  # (L, B, ...) — batch on axis 1 (k/v/scales)
+        if a is None:
+            return None
+        m = newly.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, b[:, rows], a)
+
+    def mix_b0(a, b):  # (B, ...) — batch on axis 0 (pos/cursor)
+        if a is None:
+            return None
+        m = newly.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, b[rows], a)
+
+    cache = tm.KVCache(
+        k=mix_b1(arena.k, new.k),
+        v=mix_b1(arena.v, new.v),
+        pos=mix_b0(arena.pos, new.pos),
+        cursor=mix_b0(arena.cursor, new.cursor),
+        k_scale=mix_b1(arena.k_scale, new.k_scale),
+        v_scale=mix_b1(arena.v_scale, new.v_scale),
+    )
+    return cache, jnp.where(newly, first[rows], cur_tok)
+
+
 class ServeEngine:
+    """Continuous-batching decode server over a fixed KV arena.
+
+    Usage::
+
+        eng = ServeEngine(params, cfg, slots=8, cache_len=512)
+        eng.submit(Request(uid=0, prompt_ids=ids, max_new_tokens=32))
+        finished = eng.run_to_completion()
+    """
+
     def __init__(
         self, params, cfg: TransformerConfig, *, slots: int = 8,
         cache_len: int = 512, eos_id: Optional[int] = None,
@@ -47,36 +112,51 @@ class ServeEngine:
         self.cache = tm.init_cache(cfg, slots, cache_len)
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.live = np.zeros(slots, bool)
-        self._decode = jax.jit(
-            lambda p, c, t: tm.serve_step(p, c, t, cfg), static_argnums=()
-        )
-        self._prefill_one = jax.jit(
-            lambda p, toks, tl: tm.prefill(p, toks, tl, cfg, cache_len)
-        )
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt_ids) >= self.cache_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt_ids)} tokens cannot fit "
+                f"cache_len={self.cache_len} (need room for >=1 new token)"
+            )
         self.queue.append(req)
 
     def _admit(self) -> None:
-        for i in range(self.slots):
-            if self.live[i] or not self.queue:
-                continue
-            req = self.queue.popleft()
-            L = len(req.prompt_ids)
-            toks = jnp.asarray(req.prompt_ids, jnp.int32)[None]
-            tl = jnp.asarray([L], jnp.int32)
-            logits, cache1 = self._prefill_one(self.params, toks, tl)
-            first = int(jnp.argmax(logits[0]))
-            # merge this request's rows into the shared arena
-            self.cache = tm.KVCache(
-                k=self.cache.k.at[:, i].set(cache1.k[:, 0]),
-                v=self.cache.v.at[:, i].set(cache1.v[:, 0]),
-                pos=self.cache.pos.at[i].set(cache1.pos[0]),
-                cursor=self.cache.cursor.at[i].set(cache1.cursor[0]),
-            )
-            self.cur_tok = self.cur_tok.at[i].set(first)
-            req.out_tokens.append(first)
+        free = [i for i in range(self.slots) if not self.live[i]]
+        take = min(len(free), len(self.queue))
+        if take == 0:
+            return
+        reqs = [self.queue.popleft() for _ in range(take)]
+        slot_ids = free[:take]
+        # one masked batched prefill: batch padded to `slots` rows, lengths
+        # padded to a shared power-of-two bucket
+        bucket = _bucket_len(max(len(r.prompt_ids) for r in reqs),
+                             self.cache_len)
+        toks = np.zeros((self.slots, bucket), np.int32)
+        tl = np.zeros((self.slots,), np.int32)
+        for j, r in enumerate(reqs):
+            L = len(r.prompt_ids)  # submit() guarantees L < cache_len
+            toks[j, :L] = np.asarray(r.prompt_ids, np.int32)
+            tl[j] = L
+        logits, fresh = _prefill_batch(
+            self.params, jnp.asarray(toks), jnp.asarray(tl),
+            self.cfg, self.cache_len,
+        )
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (slots,)
+        rows = np.zeros(self.slots, np.int32)
+        newly = np.zeros(self.slots, bool)
+        for j, i in enumerate(slot_ids):
+            rows[i] = j
+            newly[i] = True
+        self.cache, self.cur_tok = _merge_admitted(
+            self.cache, fresh, self.cur_tok, first,
+            jnp.asarray(rows), jnp.asarray(newly),
+        )
+        first_np = np.asarray(first)
+        for j, i in enumerate(slot_ids):
+            req = reqs[j]
+            req.out_tokens.append(int(first_np[j]))
             self.active[i] = req
             self.live[i] = True
 
@@ -85,7 +165,9 @@ class ServeEngine:
         self._admit()
         if not self.live.any():
             return []
-        nxt, self.cache = self._decode(self.params, self.cache, self.cur_tok)
+        nxt, self.cache = tm.serve_step(
+            self.params, self.cache, self.cur_tok, self.cfg
+        )
         self.cur_tok = nxt
         finished = []
         toks = np.asarray(nxt)

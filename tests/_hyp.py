@@ -1,0 +1,71 @@
+"""`hypothesis` compatibility shim for property-based tests.
+
+On environments with hypothesis installed, re-exports the real
+``given``/``settings``/``st``.  On bare environments it provides a tiny
+deterministic fallback: ``@given`` draws ``max_examples`` samples from the
+declared strategies with a fixed-seed PRNG and runs the test body once per
+sample.  No shrinking, no database — just enough to keep the property tests
+executing (and the modules collecting) everywhere.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def draw(self, rnd):
+            return self._sample(rnd)
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda r: r.choice(opts))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.randint(0, 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = getattr(run, "_max_examples", 10)
+                rnd = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rnd) for k, s in strats.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strats]
+            run.__signature__ = sig.replace(parameters=keep)
+            del run.__wrapped__  # or pytest re-reads fn's signature
+            return run
+
+        return deco

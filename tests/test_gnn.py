@@ -114,6 +114,7 @@ def equi_setup():
     return cfg, params, inputs, pos
 
 
+@pytest.mark.slow
 def test_equiformer_forward_and_grad(equi_setup):
     cfg, params, inputs, _ = equi_setup
     out = apply_gnn(params, cfg, inputs)

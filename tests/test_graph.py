@@ -1,7 +1,7 @@
 """Graph substrate: CSR/ELL/batching/sampler (+ hypothesis invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.graph import CSRGraph, NeighborSampler, batch_graphs, csr_to_ell, generators
 

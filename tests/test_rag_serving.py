@@ -1,0 +1,215 @@
+"""Fused RAG serving: golden pipeline behaviour + engine/reference parity +
+retrieval-cache semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BruteIndex, GraphTokenizer, PipelineConfig, RGLPipeline, Vocab,
+)
+from repro.core import naive
+from repro.core.tokenization import subgraph_texts
+from repro.graph import csr_to_ell, generators
+from repro.models.transformer import TransformerConfig, model as tm
+from repro.models.transformer.generate import generate_tokens
+from repro.serving import RAGRequest, RAGServeEngine, RetrievalCache
+
+N_NODES = 200
+MAX_LEN = 96
+MAX_NEW = 6
+CACHE_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def stack():
+    g = generators.citation_graph(N_NODES, avg_deg=6, seed=11)
+    ell = csr_to_ell(g)
+    emb = jnp.asarray(g.node_feat)
+    vocab = Vocab.build(g.node_text)
+    tok = GraphTokenizer(vocab, max_len=MAX_LEN, node_budget=8)
+    pipe = RGLPipeline(
+        graph=ell, index=BruteIndex.build(emb), node_emb=emb, tokenizer=tok,
+        node_text=g.node_text,
+        config=PipelineConfig(strategy="bfs", k_seeds=3, max_hops=2,
+                              max_nodes=16, filter_budget=8),
+    )
+    cfg = TransformerConfig(
+        name="rag-t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        d_head=16, d_ff=64, vocab=vocab.size, dtype="float32",
+    )
+    params = tm.init_params(jax.random.PRNGKey(0), cfg)
+    return g, pipe, cfg, params
+
+
+# ---------------------------------------------------------------- golden ----
+def test_pipeline_run_golden(stack):
+    """RGLPipeline.run on a small deterministic graph: seed ids, filtered
+    subgraph membership, and prompt shapes all match the reference path."""
+    g, pipe, _, _ = stack
+    qe = jnp.asarray(g.node_feat[:3])
+    texts = [g.node_text[i] for i in range(3)]
+    out = pipe.run(qe, texts)
+
+    # seeds == the exact top-k of the brute index (ref oracle)
+    from repro.kernels.topk_sim import ref as tref
+    from repro.core.indexing import l2_normalize
+
+    emb_n = l2_normalize(jnp.asarray(g.node_feat))
+    _, exp_seeds = tref.topk_similarity(l2_normalize(qe), emb_n, 3)
+    np.testing.assert_array_equal(out["seeds"], np.asarray(exp_seeds))
+    for qi in range(3):  # a node's own embedding retrieves itself
+        assert qi in out["seeds"][qi]
+
+    # filtered membership: subset of the naive BFS ball, seeds preserved,
+    # budget respected
+    adj = g.to_adj_dict()
+    sub = out["subgraph"]
+    nodes = np.asarray(sub.nodes)
+    mask = np.asarray(sub.mask)
+    for qi in range(3):
+        got = {int(v) for v, m in zip(nodes[qi], mask[qi]) if m}
+        ball = set(naive.bfs_subgraph(adj, sorted(set(out["seeds"][qi].tolist())),
+                                      2, N_NODES))
+        assert got <= ball
+        assert set(out["seeds"][qi].tolist()) <= got
+        assert len(got) <= pipe.config.filter_budget + pipe.config.k_seeds
+
+    # fixed prompt shapes + determinism
+    assert out["prompt_ids"].shape == (3, MAX_LEN)
+    assert out["prompt_mask"].shape == (3, MAX_LEN)
+    out2 = pipe.run(qe, texts)
+    np.testing.assert_array_equal(out["prompt_ids"], out2["prompt_ids"])
+
+
+def test_retrieve_many_padding_is_inert(stack):
+    """Padded rows in the fixed-shape serving batch never perturb real rows."""
+    g, pipe, _, _ = stack
+    qe = np.asarray(g.node_feat[:2], np.float32)
+    sub1, seeds1 = pipe.retrieve(jnp.asarray(qe))
+    sub8, seeds8, n_valid = pipe.retrieve_many(qe, batch_size=8)
+    assert n_valid == 2 and seeds8.shape[0] == 8
+    np.testing.assert_array_equal(np.asarray(seeds8)[:2], np.asarray(seeds1))
+    np.testing.assert_array_equal(np.asarray(sub8.nodes)[:2],
+                                  np.asarray(sub1.nodes))
+    np.testing.assert_array_equal(np.asarray(sub8.mask)[:2],
+                                  np.asarray(sub1.mask))
+
+
+# ---------------------------------------------------- engine vs reference ----
+def _reference_tokens(g, pipe, cfg, params, qi):
+    """Unbatched pipeline + offline greedy decode — the fused engine oracle."""
+    sub, _ = pipe.retrieve(jnp.asarray(g.node_feat[qi])[None])
+    texts = subgraph_texts(sub, g.node_text)[0]
+    ids, mask = pipe.tokenizer.linearize(g.node_text[qi], texts)
+    prompt = ids[mask]
+    out = generate_tokens(
+        params, jnp.asarray(prompt)[None], jnp.asarray([len(prompt)]),
+        jax.random.PRNGKey(0), cfg, max_new=MAX_NEW, cache_len=CACHE_LEN,
+        temperature=0.0,
+    )
+    return np.asarray(out[0]).tolist()
+
+
+def test_fused_engine_matches_unbatched_pipeline(stack):
+    """A single fused-engine request is token-identical to the unbatched
+    RGLPipeline + greedy-decode reference path."""
+    g, pipe, cfg, params = stack
+    eng = RAGServeEngine(pipe, params, cfg, slots=2, cache_len=CACHE_LEN)
+    eng.submit(RAGRequest(uid=0, query_emb=np.asarray(g.node_feat[0]),
+                          query_text=g.node_text[0], max_new_tokens=MAX_NEW))
+    done = eng.run_to_completion()
+    assert len(done) == 1 and done[0].done
+    assert done[0].out_tokens[:MAX_NEW] == _reference_tokens(
+        g, pipe, cfg, params, 0
+    )
+
+
+def test_fused_engine_batch_matches_reference(stack):
+    """Batched admission (shared prefill + shared retrieval batch) stays
+    token-identical per request."""
+    g, pipe, cfg, params = stack
+    eng = RAGServeEngine(pipe, params, cfg, slots=4, cache_len=CACHE_LEN)
+    for qi in range(4):
+        eng.submit(RAGRequest(uid=qi, query_emb=np.asarray(g.node_feat[qi]),
+                              query_text=g.node_text[qi],
+                              max_new_tokens=MAX_NEW))
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert set(done) == {0, 1, 2, 3}
+    assert eng.retrieval_batches == 1  # one jitted call for the whole wave
+    for qi in range(4):
+        assert done[qi].out_tokens[:MAX_NEW] == _reference_tokens(
+            g, pipe, cfg, params, qi
+        )
+
+
+# ------------------------------------------------------------------ cache ----
+def test_retrieval_cache_hit_and_counters(stack):
+    g, pipe, cfg, params = stack
+    eng = RAGServeEngine(pipe, params, cfg, slots=2, cache_len=CACHE_LEN)
+
+    def ask(uid):
+        eng.submit(RAGRequest(uid=uid, query_emb=np.asarray(g.node_feat[5]),
+                              query_text=g.node_text[5],
+                              max_new_tokens=MAX_NEW))
+        return eng.run_to_completion()[0]
+
+    first = ask(0)
+    assert (eng.cache_hits, eng.cache_misses) == (0, 1)
+    assert not first.cache_hit
+
+    second = ask(1)  # identical query -> served from the retrieval cache
+    assert (eng.cache_hits, eng.cache_misses) == (1, 1)
+    assert second.cache_hit
+    assert eng.retrieved_queries == 1  # no second retrieval ran
+    assert second.out_tokens == first.out_tokens
+    np.testing.assert_array_equal(second.prompt_ids, first.prompt_ids)
+
+    # near-duplicate within quantization eps also hits
+    jitter = np.asarray(g.node_feat[5]) + 1e-5
+    eng.submit(RAGRequest(uid=2, query_emb=jitter, query_text=g.node_text[5],
+                          max_new_tokens=MAX_NEW))
+    third = eng.run_to_completion()[0]
+    assert third.cache_hit and eng.cache_hits == 2
+
+
+def test_retrieval_cache_lru_eviction():
+    cache = RetrievalCache(capacity=2)
+    from repro.serving import CachedRetrieval
+
+    def entry(i):
+        return CachedRetrieval(
+            nodes=np.asarray([i], np.int32), mask=np.asarray([True]),
+            dist=np.asarray([0], np.int32), seeds=np.asarray([i], np.int32),
+        )
+
+    e0, e1, e2 = (np.full(4, i, np.float32) for i in range(3))
+    cache.put(e0, entry(0))
+    cache.put(e1, entry(1))
+    assert cache.get(e0) is not None  # refresh e0 -> e1 becomes LRU
+    cache.put(e2, entry(2))  # evicts e1
+    assert cache.get(e1) is None
+    assert cache.get(e0) is not None and cache.get(e2) is not None
+    assert cache.evictions == 1
+    assert cache.stats()["size"] == 2
+
+
+def test_oversized_prompt_rejected_loudly(stack):
+    """Prompts that cannot fit the KV arena fail at submit, not silently."""
+    from repro.serving import Request, ServeEngine
+
+    g, pipe, cfg, params = stack
+    eng = ServeEngine(params, cfg, slots=2, cache_len=16)
+    with pytest.raises(ValueError, match="cannot fit"):
+        eng.submit(Request(uid=0, prompt_ids=np.arange(1, 40, dtype=np.int32)))
+    # and the fused engine refuses a tokenizer/arena mismatch at construction
+    with pytest.raises(ValueError, match="max_len"):
+        RAGServeEngine(pipe, params, cfg, slots=2, cache_len=MAX_LEN)
+
+
+def test_cache_disabled():
+    cache = RetrievalCache(capacity=0)
+    emb = np.ones(4, np.float32)
+    assert cache.get(emb) is None
+    cache.put(emb, None)  # no-op
+    assert len(cache) == 0 and cache.misses == 1

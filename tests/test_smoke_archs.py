@@ -15,6 +15,10 @@ from repro.models.gnn.wigner import build_wigner_lut
 from repro.models.recsys import wide_deep as wd
 from repro.models.transformer import model as tm
 
+# whole-arch train/serve smokes are the long tail of the suite; tier-1 runs
+# `-m "not slow"` (pytest.ini), `-m slow` covers these
+pytestmark = pytest.mark.slow
+
 LM_ARCHS = [a for a in C.ARCH_IDS if C.get_config(a).family == "lm"]
 GNN_ARCHS = [a for a in C.ARCH_IDS if C.get_config(a).family == "gnn"]
 
