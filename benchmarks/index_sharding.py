@@ -1,0 +1,165 @@
+"""Index-sharding benchmark: single-device vs sharded brute scan, and
+dense-gather einsum IVF vs the tiled ivf_scan path.
+
+Two comparisons per corpus size N (paper's "retrieval at scale" claim):
+
+* brute   — one-device ``BruteIndex.search`` vs ``ShardedIndex.search``
+  (row-partitioned shard_map scan + hierarchical top-k merge).  Results are
+  asserted bit-identical, so the timing delta is pure execution layout.
+* ivf     — the old dense ``(Q, nprobe*L, D)`` gather+einsum candidate scan
+  vs the tiled fixed-shape scan (``repro.kernels.ivf_scan``).  Same index,
+  same probes; identical results, bounded peak memory.
+
+CPU container: host "devices" are forced via XLA_FLAGS (only effective when
+this module is the entry point and jax is not yet initialized); ratios are
+the tracked signal, not absolute times.  Emits machine-readable
+``BENCH_index_sharding.json``.
+
+    PYTHONPATH=src python -m benchmarks.index_sharding [--fast]
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must happen before jax initializes a backend
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.indexing import (
+    BruteIndex, IVFIndex, _ivf_search, l2_normalize,
+)
+from repro.core.sharding import ShardedIndex
+
+
+def _timed(fn, reps: int = 3):
+    out = jax.block_until_ready(fn())  # warm: compile outside the timing
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(
+    corpus_sizes=(50_000, 200_000, 1_000_000),
+    d: int = 64,
+    n_queries: int = 32,
+    k: int = 10,
+    n_shards: int | None = None,
+    n_clusters: int = 256,
+    nprobe: int = 8,
+    seed: int = 0,
+) -> dict:
+    n_devices = jax.device_count()
+    if n_shards is None:
+        n_shards = max(n_devices, 4)
+    # off-TPU the Pallas path runs in interpret mode (an emulator); measure
+    # the jnp scan on both sides so the comparison is layout vs layout
+    use_kernel = None if jax.default_backend() == "tpu" else False
+    rng = np.random.default_rng(seed)
+    results = []
+    for n in corpus_sizes:
+        emb = rng.standard_normal((n, d)).astype(np.float32)
+        q = rng.standard_normal((n_queries, d)).astype(np.float32)
+        row: dict = {"n": n, "d": d, "queries": n_queries, "k": k}
+
+        # ---- brute: single device vs sharded --------------------------------
+        brute = BruteIndex.build(emb)
+        single_s, (bs, bi) = _timed(
+            lambda: topk_unsharded(brute, q, k, use_kernel)
+        )
+        sharded = ShardedIndex.build(emb, n_shards=n_shards,
+                                     use_kernel=use_kernel)
+        shard_s, (ss, si) = _timed(lambda: sharded.search(q, k))
+        assert np.array_equal(np.asarray(bi), np.asarray(si)), "id mismatch"
+        assert np.array_equal(
+            np.asarray(bs).view(np.uint32), np.asarray(ss).view(np.uint32)
+        ), "score mismatch"
+        row.update(
+            brute_single_s=single_s, brute_sharded_s=shard_s,
+            n_shards=sharded.n_shards, mesh_devices=sharded.mesh.size,
+            brute_sharded_speedup=single_s / max(shard_s, 1e-12),
+        )
+
+        # ---- ivf: dense gather vs tiled scan --------------------------------
+        ivf = IVFIndex.build(emb, n_clusters=n_clusters, nprobe=nprobe,
+                             n_iter=3, seed=seed)
+        qn = l2_normalize(jnp.asarray(q))
+        args = (ivf.emb, ivf.centroids, ivf.lists, ivf.list_mask, qn,
+                ivf.nprobe, k)
+        dense_s, (ds, di) = _timed(lambda: _ivf_search(*args, tiled=False))
+        tiled_s, (ts, ti) = _timed(lambda: _ivf_search(*args, tiled=True))
+        # allclose, not bitwise: XLA CPU's dense einsum rounds
+        # position-dependently (up to 1 ULP), which can also permute exact
+        # near-ties between the two paths
+        assert np.allclose(np.asarray(ds), np.asarray(ts),
+                           rtol=1e-6, atol=1e-6), "ivf score mismatch"
+        id_agree = np.mean(np.asarray(di) == np.asarray(ti))
+        assert id_agree >= 0.99, f"ivf id agreement {id_agree}"
+        row.update(
+            ivf_clusters=ivf.centroids.shape[0],
+            ivf_list_len=int(ivf.lists.shape[1]), ivf_nprobe=ivf.nprobe,
+            ivf_dense_s=dense_s, ivf_tiled_s=tiled_s,
+            ivf_tiled_speedup=dense_s / max(tiled_s, 1e-12),
+        )
+        results.append(row)
+    return {
+        "devices": n_devices,
+        "backend": jax.default_backend(),
+        "config": {
+            "d": d, "queries": n_queries, "k": k, "n_shards": n_shards,
+            "n_clusters": n_clusters, "nprobe": nprobe,
+        },
+        "results": results,
+    }
+
+
+def topk_unsharded(index: BruteIndex, q, k: int, use_kernel):
+    from repro.kernels.topk_sim import ops as topk_ops
+
+    qn = l2_normalize(jnp.asarray(q, jnp.float32))
+    return topk_ops.topk_similarity(qn, index.emb, k, use_kernel=use_kernel)
+
+
+def write_json(report: dict, path: str = "BENCH_index_sharding.json") -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (smoke run)")
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_index_sharding.json")
+    args = ap.parse_args()
+    sizes = (20_000, 50_000) if args.fast else (50_000, 200_000, 1_000_000)
+    report = run(corpus_sizes=sizes, n_shards=args.shards)
+    print(f"backend={report['backend']} devices={report['devices']}")
+    for r in report["results"]:
+        print(
+            f"N={r['n']:>9,}  brute {r['brute_single_s'] * 1e3:7.1f}ms -> "
+            f"sharded({r['n_shards']}) {r['brute_sharded_s'] * 1e3:7.1f}ms "
+            f"({r['brute_sharded_speedup']:.2f}x)   "
+            f"ivf dense {r['ivf_dense_s'] * 1e3:7.1f}ms -> "
+            f"tiled {r['ivf_tiled_s'] * 1e3:7.1f}ms "
+            f"({r['ivf_tiled_speedup']:.2f}x)"
+        )
+    write_json(report, args.out)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ are the reproduction target, not absolute times.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -27,24 +28,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    BruteIndex, GraphTokenizer, PipelineConfig, RGLPipeline, Vocab,
+    GraphTokenizer, PipelineConfig, RGLPipeline, Vocab, index_from_config,
 )
 from repro.graph import csr_to_ell, generators
 from repro.models.transformer import TransformerConfig, model as tm
 from repro.serving import RAGRequest, RAGServeEngine, RetrievalCache
 
 
-def _build(n_nodes: int, seed: int = 0):
+def _build(n_nodes: int, seed: int = 0, index_kind: str = "brute",
+           index_shards: int | None = None):
     g = generators.citation_graph(n_nodes, avg_deg=8, seed=seed)
     ell = csr_to_ell(g)
     emb = jnp.asarray(g.node_feat)
     vocab = Vocab.build(g.node_text)
     tok = GraphTokenizer(vocab, max_len=128, node_budget=8)
+    pcfg = PipelineConfig(strategy="bfs", k_seeds=3, max_nodes=16,
+                          filter_budget=6, index_kind=index_kind,
+                          index_shards=index_shards)
     pipe = RGLPipeline(
-        graph=ell, index=BruteIndex.build(emb), node_emb=emb, tokenizer=tok,
-        node_text=g.node_text,
-        config=PipelineConfig(strategy="bfs", k_seeds=3, max_nodes=16,
-                              filter_budget=6),
+        graph=ell, index=index_from_config(emb, pcfg), node_emb=emb,
+        tokenizer=tok, node_text=g.node_text, config=pcfg,
     )
     cfg = TransformerConfig(
         name="bench-lm", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
@@ -66,8 +69,9 @@ def _requests(g, emb_np, q_ids, max_new):
 
 
 def run(n_nodes: int = 2000, n_requests: int = 32, slots: int = 8,
-        max_new: int = 24, seed: int = 0) -> dict:
-    g, pipe, cfg, params = _build(n_nodes, seed)
+        max_new: int = 24, seed: int = 0, index_kind: str = "brute",
+        index_shards: int | None = None) -> dict:
+    g, pipe, cfg, params = _build(n_nodes, seed, index_kind, index_shards)
     emb_np = np.asarray(pipe.node_emb)
     rng = np.random.default_rng(seed)
     q_ids = rng.choice(n_nodes, size=n_requests, replace=False)
@@ -119,6 +123,7 @@ def run(n_nodes: int = 2000, n_requests: int = 32, slots: int = 8,
     assert fused.cache_hits == n_requests  # 100% hit replay
 
     return {
+        "n_nodes": n_nodes, "index_kind": index_kind,
         "n_requests": n_requests, "slots": slots, "max_new": max_new,
         "seq_s": seq_s, "seq_tok_s": seq_toks / seq_s,
         "fused_s": fused_s, "fused_tok_s": fused_toks / fused_s,
@@ -131,17 +136,27 @@ def run(n_nodes: int = 2000, n_requests: int = 32, slots: int = 8,
     }
 
 
+def write_json(result: dict, path: str = "BENCH_rag_serving.json") -> None:
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=2000)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max_new", type=int, default=24)
+    ap.add_argument("--index", default="brute",
+                    choices=["brute", "ivf", "sharded", "sharded_ivf"])
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_rag_serving.json")
     args = ap.parse_args()
     r = run(n_nodes=args.nodes, n_requests=args.requests, slots=args.slots,
-            max_new=args.max_new)
+            max_new=args.max_new, index_kind=args.index,
+            index_shards=args.shards)
     print(f"workload: {r['n_requests']} requests x {r['max_new']} new tokens, "
-          f"{args.nodes}-node graph")
+          f"{args.nodes}-node graph, index={r['index_kind']}")
     print(f"sequential (1 slot, no cache): {r['seq_s']:.2f}s "
           f"({r['seq_tok_s']:.1f} tok/s)")
     print(f"fused ({r['slots']} slots, cold cache): {r['fused_s']:.2f}s "
@@ -153,6 +168,8 @@ def main() -> None:
     print(f"retrieval stage: cold {r['cold_retrieval_s'] * 1e3:.1f}ms -> "
           f"cached {r['warm_retrieval_s'] * 1e3:.1f}ms "
           f"({r['retrieval_speedup']:.0f}x)")
+    write_json(r, args.out)
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

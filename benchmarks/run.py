@@ -5,6 +5,9 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * modality_completion — paper Table 1 (R@20 / N@20 per method)
   * abstract_generation — paper Table 2 (ROUGE-1/2/L per context)
   * kernels             — microbench of the Pallas-kernel reference paths
+  * serving             — fused RAG serving (also writes BENCH_rag_serving.json)
+  * sharding            — sharded index + tiled IVF scan (also writes
+                          BENCH_index_sharding.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 """
@@ -16,14 +19,16 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=[
-        "retrieval", "completion", "abstract", "kernels",
+        "retrieval", "completion", "abstract", "kernels", "serving",
+        "sharding",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
     args = ap.parse_args()
 
     from benchmarks import (
-        abstract_generation, kernels, modality_completion, retrieval_scaling,
+        abstract_generation, index_sharding, kernels, modality_completion,
+        rag_serving, retrieval_scaling,
     )
 
     print("name,us_per_call,derived")
@@ -45,6 +50,21 @@ def main() -> None:
     if args.only in (None, "kernels"):
         for r in kernels.run():
             print(f"kernels/{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.only in (None, "serving"):
+        kw = dict(n_nodes=1000, n_requests=8, max_new=8) if args.fast else {}
+        r = rag_serving.run(**kw)
+        rag_serving.write_json(r)
+        print(f"serving/fused_vs_seq,{r['fused_s'] * 1e6:.0f},"
+              f"ratio={r['throughput_ratio']:.1f}x;"
+              f"replay={r['replay_speedup']:.2f}x")
+    if args.only in (None, "sharding"):
+        sizes = (20_000, 50_000) if args.fast else (50_000, 200_000)
+        rep = index_sharding.run(corpus_sizes=sizes)
+        index_sharding.write_json(rep)
+        for r in rep["results"]:
+            print(f"sharding/n={r['n']},{r['brute_sharded_s'] * 1e6:.0f},"
+                  f"brute_sharded={r['brute_sharded_speedup']:.2f}x;"
+                  f"ivf_tiled={r['ivf_tiled_speedup']:.2f}x")
 
 
 if __name__ == "__main__":

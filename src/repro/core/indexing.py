@@ -1,23 +1,27 @@
 """Stage 1 of the RGL pipeline: indexing.
 
-Two vector indexes over node embeddings (paper §2.1.2):
+Vector indexes over node embeddings (paper §2.1.2):
 
 * :class:`BruteIndex` — exact MXU-friendly scoring.  The hot loop is the
   fused similarity→top-k Pallas kernel (``repro.kernels.topk_sim``).
 * :class:`IVFIndex` — k-means coarse quantizer (Lloyd in jnp) with padded
   inverted lists; probes ``nprobe`` lists per query.  Sub-linear scan cost,
-  fixed shapes throughout (lists padded to the longest list).
+  fixed shapes throughout (lists padded to the longest list).  Candidate
+  scoring streams through the tiled ``repro.kernels.ivf_scan`` path instead
+  of materializing the dense (Q, nprobe*L, D) gather.
+* ``ShardedIndex`` (``repro.core.sharding``) — row-partitions either scan
+  across a device mesh and merges per-shard top-k hierarchically.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ivf_scan import ops as ivf_ops
 from repro.kernels.topk_sim import ops as topk_ops
 
 
@@ -48,10 +52,18 @@ class BruteIndex:
 def kmeans(
     x: jnp.ndarray, n_clusters: int, n_iter: int = 10, seed: int = 0
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Lloyd's algorithm.  Returns (centroids (C, D), assignment (N,))."""
+    """Lloyd's algorithm.  Returns (centroids (C, D), assignment (N,)).
+
+    When ``n_clusters > n`` the init falls back to sampling with
+    replacement (duplicate centroids yield empty clusters, which the
+    update step already keeps frozen) instead of crashing
+    ``jax.random.choice(replace=False)``.
+    """
     n = x.shape[0]
     key = jax.random.PRNGKey(seed)
-    init = jax.random.choice(key, n, shape=(n_clusters,), replace=False)
+    init = jax.random.choice(
+        key, n, shape=(n_clusters,), replace=n_clusters > n
+    )
     cent = x[init]
 
     def step(cent, _):
@@ -72,6 +84,28 @@ def kmeans(
     return cent, assigns[-1]
 
 
+def build_inverted_lists(
+    assign: np.ndarray, n: int, n_clusters: int, min_pad: int = 8
+) -> tuple[np.ndarray, np.ndarray]:
+    """Padded inverted lists from a cluster assignment — vectorized scatter.
+
+    Returns (lists (C, L) int32 with sentinel n, mask (C, L) bool).  A
+    member's rank within its cluster is its position in the stable argsort
+    minus the cluster's start offset (cumcount), so the whole fill is three
+    NumPy ops instead of an O(N) Python loop.
+    """
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=n_clusters)
+    pad = max(min_pad, int(counts.max()) if n else min_pad)
+    lists = np.full((n_clusters, pad), n, dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    ranks = np.arange(n) - starts[sorted_assign]
+    lists[sorted_assign, ranks] = order
+    return lists, lists < n
+
+
 @dataclasses.dataclass
 class IVFIndex:
     """Inverted-file index: coarse centroids + padded member lists."""
@@ -90,50 +124,45 @@ class IVFIndex:
         emb = jnp.asarray(emb, dtype=jnp.float32)
         if normalize:
             emb = l2_normalize(emb)
-        cent, assign = kmeans(emb, n_clusters, n_iter=n_iter, seed=seed)
-        assign_np = np.asarray(assign)
         n = emb.shape[0]
-        counts = np.bincount(assign_np, minlength=n_clusters)
-        pad = max(8, int(counts.max()))
-        lists = np.full((n_clusters, pad), n, dtype=np.int32)
-        fill = np.zeros(n_clusters, dtype=np.int64)
-        order = np.argsort(assign_np, kind="stable")
-        for i in order:  # host-side build; O(N)
-            c = assign_np[i]
-            lists[c, fill[c]] = i
-            fill[c] += 1
-        mask = lists < n
+        n_clusters = max(1, min(n_clusters, n))
+        cent, assign = kmeans(emb, n_clusters, n_iter=n_iter, seed=seed)
+        lists, mask = build_inverted_lists(np.asarray(assign), n, n_clusters)
         return IVFIndex(
             emb=emb,
             centroids=jnp.asarray(cent),
             lists=jnp.asarray(lists),
             list_mask=jnp.asarray(mask),
-            nprobe=nprobe,
+            nprobe=min(nprobe, n_clusters),
         )
 
     def search(self, queries: jnp.ndarray, k: int):
         q = l2_normalize(jnp.asarray(queries, dtype=jnp.float32))
         return _ivf_search(
             self.emb, self.centroids, self.lists, self.list_mask, q,
-            self.nprobe, k,
+            min(self.nprobe, self.centroids.shape[0]), k,
         )
 
 
-@partial(jax.jit, static_argnames=("nprobe", "k"))
-def _ivf_search(emb, centroids, lists, list_mask, q, nprobe: int, k: int):
-    n, d = emb.shape
-    # 1) score centroids, pick nprobe lists per query
+def ivf_probe_scan(
+    emb, centroids, lists, list_mask, q, nprobe: int, k: int,
+    tiled: Optional[bool] = None,
+):
+    """Trace-time core of the IVF search (also reused per shard).
+
+    1) score centroids, pick nprobe lists per query;
+    2) gather candidate ids (Q, nprobe*L) with sentinel padding;
+    3) tiled candidate scan (repro.kernels.ivf_scan) — fixed-shape chunks
+       instead of a dense (Q, nprobe*L, D) embedding gather.
+    """
     cs = q @ centroids.T  # (Q, C)
     _, probe = jax.lax.top_k(cs, nprobe)  # (Q, P)
-    # 2) gather candidate ids (Q, P*L) with sentinel padding
-    cand = lists[probe].reshape(q.shape[0], -1)  # (Q, P*L)
+    cand = lists[probe].reshape(q.shape[0], -1)  # (Q, P*L) int32 ids
     cmask = list_mask[probe].reshape(q.shape[0], -1)
-    emb_pad = jnp.concatenate([emb, jnp.zeros((1, d), emb.dtype)], 0)
-    ce = emb_pad[cand]  # (Q, P*L, D)
-    scores = jnp.einsum("qd,qld->ql", q, ce)
-    scores = jnp.where(cmask, scores, -jnp.inf)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, jnp.take_along_axis(cand, top_i, axis=1)
+    return ivf_ops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=tiled)
+
+
+_ivf_search = jax.jit(ivf_probe_scan, static_argnames=("nprobe", "k", "tiled"))
 
 
 def build_index(emb, kind: str = "brute", **kw):
@@ -141,4 +170,9 @@ def build_index(emb, kind: str = "brute", **kw):
         return BruteIndex.build(emb, **kw)
     if kind == "ivf":
         return IVFIndex.build(emb, **kw)
+    if kind in ("sharded", "sharded_ivf"):
+        from repro.core.sharding import ShardedIndex  # local: avoid cycle
+
+        inner = "ivf" if kind == "sharded_ivf" else "brute"
+        return ShardedIndex.build(emb, inner=inner, **kw)
     raise ValueError(f"unknown index kind: {kind}")

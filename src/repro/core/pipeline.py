@@ -26,6 +26,22 @@ class PipelineConfig:
     filter_budget: int = 32  # dynamic node filter budget (<= max_nodes)
     max_prompt_len: int = 512
     node_token_budget: int = 48
+    # stage-1 vector index: brute | ivf | sharded | sharded_ivf
+    index_kind: str = "brute"
+    index_shards: Optional[int] = None  # sharded kinds; None = one per device
+
+
+def index_from_config(emb, config: PipelineConfig, **kw):
+    """Build the stage-1 index named by ``config.index_kind``.
+
+    Serving entry points (``repro.launch.serve``, benchmarks) route through
+    this so the index backend and shard count are plain config, not code.
+    """
+    from repro.core.indexing import build_index
+
+    if config.index_kind in ("sharded", "sharded_ivf"):
+        kw.setdefault("n_shards", config.index_shards)
+    return build_index(emb, kind=config.index_kind, **kw)
 
 
 @dataclasses.dataclass

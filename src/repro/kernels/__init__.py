@@ -4,4 +4,6 @@ Each kernel package ships kernel.py (pl.pallas_call + BlockSpec tiling),
 ops.py (jit'd public wrapper with padding + fallback) and ref.py (pure-jnp
 oracle used by the allclose test sweeps).
 """
-from repro.kernels import topk_sim, ell_spmm, flash_attn, bfs_frontier  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    topk_sim, ell_spmm, flash_attn, bfs_frontier, ivf_scan,
+)

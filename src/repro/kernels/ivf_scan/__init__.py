@@ -1,0 +1,1 @@
+from repro.kernels.ivf_scan import kernel, ops, ref  # noqa: F401

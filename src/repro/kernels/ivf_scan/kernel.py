@@ -1,0 +1,77 @@
+"""Tiled IVF candidate scan: fixed-shape blocked gather+score+merge.
+
+The IVF probe step scores each query against the members of its ``nprobe``
+inverted lists.  The dense path (ref.py) gathers all ``W = nprobe * L``
+candidate embeddings at once — a ``(Q, W, D)`` HBM materialization that
+dwarfs the useful output.  This kernel streams the candidate axis in
+``c_blk``-wide tiles instead, exactly like ``topk_sim`` streams the node
+axis:
+
+  for each chunk j of c_blk candidate slots:
+    * gather   (Q, c_blk, D)   — one tile, not the whole candidate set
+    * score    (Q, c_blk)      — batched dot against the query tile
+    * reduce   chunk top-k, then merge into the running (Q, k) via a
+      lexicographic (score desc, position asc) sort
+
+so peak memory is O(Q * c_blk * D) regardless of nprobe, and every shape
+is static.  Written as a blocked ``lax.scan`` rather than a
+``pl.pallas_call``: the gather is data-dependent over an HBM-resident
+table, which on TPU wants the scalar-prefetch/DMA pattern — the blocked
+loop gives the same tiling semantics, runs on every backend, and lets XLA
+fuse gather+dot per tile.  Matches ref.py exactly in exact arithmetic,
+including the tie-break order (position within the candidate list, the
+``jax.lax.top_k`` convention); with float scores the two paths can differ
+by 1 ULP because XLA CPU's dense einsum rounds position-dependently (the
+dense path is not even self-consistent across duplicate candidates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@functools.partial(jax.jit, static_argnames=("k", "c_blk"))
+def ivf_scan_tiled(q, emb, cand, cmask, k: int, *, c_blk: int = 1024):
+    """q: (Q, D); emb: (N, D); cand: (Q, W) int32 ids in [0, N] (N =
+    sentinel, clamped for the gather, always masked); cmask: (Q, W) bool;
+    W % c_blk == 0, k <= W.
+
+    Returns (scores (Q, k), ids (Q, k)) identical to ref.ivf_candidate_scan.
+    """
+    qn, w = cand.shape
+    assert w % c_blk == 0 and k <= w, (w, c_blk, k)
+    n_chunks = w // c_blk
+    kt = min(k, c_blk)  # per-chunk survivors
+
+    # chunk-major layout for the scan: (n_chunks, Q, c_blk)
+    cand_c = cand.reshape(qn, n_chunks, c_blk).transpose(1, 0, 2)
+    mask_c = cmask.reshape(qn, n_chunks, c_blk).transpose(1, 0, 2)
+    bases = jnp.arange(n_chunks, dtype=jnp.int32) * c_blk
+    n_max = emb.shape[0] - 1
+
+    def step(carry, xs):
+        run_s, run_p, run_i = carry  # (Q, k) each, sorted by (-score, pos)
+        c_ids, c_m, base = xs
+        ce = emb[jnp.minimum(c_ids, n_max)]  # (Q, c_blk, D) — one tile
+        s = jnp.einsum("qd,qcd->qc", q, ce)
+        s = jnp.where(c_m, s, -jnp.inf)
+        cs, cloc = jax.lax.top_k(s, kt)  # ties -> earlier in-chunk position
+        cp = base + cloc  # global candidate-list position (tie key)
+        ci = jnp.take_along_axis(c_ids, cloc, axis=1)
+        ms = jnp.concatenate([run_s, cs], axis=1)
+        mp = jnp.concatenate([run_p, cp], axis=1)
+        mi = jnp.concatenate([run_i, ci], axis=1)
+        neg, pos, ids = jax.lax.sort((-ms, mp, mi), num_keys=2)
+        return (-neg[:, :k], pos[:, :k], ids[:, :k]), None
+
+    init = (
+        jnp.full((qn, k), -jnp.inf, jnp.float32),
+        jnp.full((qn, k), _I32_MAX, jnp.int32),
+        jnp.full((qn, k), emb.shape[0], jnp.int32),  # sentinel id
+    )
+    (run_s, _, run_i), _ = jax.lax.scan(step, init, (cand_c, mask_c, bases))
+    return run_s, run_i

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the IVF candidate scan.
+
+Pads the candidate axis to a tile multiple and picks dense-gather (small
+candidate sets — one gather is cheaper than the scan machinery) vs the
+tiled path (large candidate sets — bounded peak memory) by candidate
+width.  Sentinel ids are clamped at gather time and masked at score time;
+no padded copy of the embedding table is ever made.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+from jax import jit
+
+from repro.kernels.ivf_scan import ref
+from repro.kernels.ivf_scan.kernel import ivf_scan_tiled
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jit, static_argnames=("k", "c_blk", "tiled"))
+def ivf_candidate_scan(
+    q: jnp.ndarray,      # (Q, D)
+    emb: jnp.ndarray,    # (N, D)
+    cand: jnp.ndarray,   # (Q, W) int32 ids in [0, N]; N = sentinel
+    cmask: jnp.ndarray,  # (Q, W) bool
+    k: int,
+    *,
+    c_blk: int = 1024,
+    tiled: bool | None = None,
+):
+    """Score each query against its candidate ids; return top-k (scores, ids).
+
+    The output shape is always (Q, k): invalid (masked / sentinel) slots
+    score -inf, and when the candidate list itself is narrower than k the
+    tail is padded with (-inf, sentinel) — fixed shapes for downstream
+    stages, matching ``jax.lax.top_k`` over the masked dense score matrix
+    for the leading min(k, W) columns.
+    """
+    n, d = emb.shape
+    w = cand.shape[1]
+    k_eff = min(k, w)
+    if tiled is None:
+        tiled = w >= 2 * c_blk  # heuristic: at least two candidate tiles
+    if not tiled:
+        s, i = ref.ivf_candidate_scan(q, emb, cand, cmask, k_eff)
+    else:
+        wp = _ceil_to(w, c_blk)
+        if wp != w:
+            cand = jnp.pad(cand, ((0, 0), (0, wp - w)), constant_values=n)
+            cmask = jnp.pad(cmask, ((0, 0), (0, wp - w)),
+                            constant_values=False)
+        s, i = ivf_scan_tiled(q, emb, cand, cmask, k_eff, c_blk=c_blk)
+    if k_eff < k:  # keep the (Q, k) contract even for narrow candidate sets
+        s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=-jnp.inf)
+        i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=n)
+    return s, i

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the IVF candidate scan: dense gather + einsum.
+
+This is the path the tiled kernel replaces — it materializes the whole
+``(Q, W, D)`` candidate-embedding gather in HBM before scoring, where
+``W = nprobe * list_len`` can reach 10^4 per query at production scale.
+Kept as the parity oracle and as the fast path for small candidate sets.
+
+Sentinel ids (== N) are clamped for the gather rather than served from an
+appended zero row: a full-table concat inside the caller's jit would be
+re-materialized per scan iteration on the tiled path, so both paths share
+the clamp-and-mask convention (sentinel slots are always mask=False, so the
+garbage row they gather never scores).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_candidate_scan(q, emb, cand, cmask, k: int):
+    """q: (Q, D); emb: (N, D); cand: (Q, W) int32 ids in [0, N] where N is
+    the sentinel; cmask: (Q, W) bool, False at sentinel slots.
+
+    Returns (scores (Q, k), ids (Q, k)) sorted by score desc, ties broken by
+    earlier candidate position (jax.lax.top_k semantics).  Returned ids are
+    the raw cand values (sentinels included on -inf rows).
+    """
+    safe = jnp.minimum(cand, emb.shape[0] - 1)
+    ce = emb[safe]  # (Q, W, D) — the dense gather
+    scores = jnp.einsum("qd,qwd->qw", q, ce)
+    scores = jnp.where(cmask, scores, -jnp.inf)
+    top_s, pos = jax.lax.top_k(scores, k)
+    return top_s, jnp.take_along_axis(cand, pos, axis=1)

@@ -12,6 +12,8 @@ Two modes:
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --rag
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --rag \
+        --index sharded --shards 4
 """
 from __future__ import annotations
 
@@ -50,7 +52,7 @@ def _serve_tokens(cfg, args) -> None:
 
 def _serve_rag(cfg, args) -> None:
     from repro.core import (
-        BruteIndex, GraphTokenizer, PipelineConfig, RGLPipeline, Vocab,
+        GraphTokenizer, PipelineConfig, RGLPipeline, Vocab, index_from_config,
     )
     from repro.graph import csr_to_ell, generators
 
@@ -61,11 +63,13 @@ def _serve_rag(cfg, args) -> None:
     # the arch LM decodes the graph tokenizer's vocabulary
     cfg = dataclasses.replace(cfg, vocab=vocab.size)
     tok = GraphTokenizer(vocab, max_len=96, node_budget=8)
+    pcfg = PipelineConfig(strategy="bfs", k_seeds=3, max_nodes=16,
+                          filter_budget=6, index_kind=args.index,
+                          index_shards=args.shards)
+    index = index_from_config(emb, pcfg)
     pipe = RGLPipeline(
-        graph=ell, index=BruteIndex.build(emb), node_emb=emb, tokenizer=tok,
-        node_text=g.node_text,
-        config=PipelineConfig(strategy="bfs", k_seeds=3, max_nodes=16,
-                              filter_budget=6),
+        graph=ell, index=index, node_emb=emb, tokenizer=tok,
+        node_text=g.node_text, config=pcfg,
     )
     params = tm.init_params(jax.random.PRNGKey(0), cfg)
     # the linearized graph prompt (<= tokenizer max_len) plus generated
@@ -104,6 +108,12 @@ def main():
                     help="serve end-to-end through the fused RAG engine")
     ap.add_argument("--nodes", type=int, default=1000,
                     help="synthetic graph size for --rag")
+    ap.add_argument("--index", default="brute",
+                    choices=["brute", "ivf", "sharded", "sharded_ivf"],
+                    help="stage-1 vector index backend for --rag")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard count for sharded index kinds "
+                         "(default: one per device)")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch).reduced_cfg

@@ -1,0 +1,203 @@
+"""IVF index: recall vs brute on clustered data, tiled-scan parity with the
+dense-gather oracle, vectorized list build, and degenerate edge cases."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.indexing import (
+    BruteIndex, IVFIndex, build_inverted_lists, kmeans,
+)
+from repro.kernels.ivf_scan import ops as iops
+
+
+def _clustered(rng, n_centers=10, per=120, d=24, spread=0.15):
+    centers = rng.standard_normal((n_centers, d)).astype(np.float32) * 3
+    pts = (centers[None].repeat(per, 0)
+           + spread * rng.standard_normal((per, n_centers, d))).reshape(-1, d)
+    return pts.astype(np.float32), centers
+
+
+# ----------------------------------------------------------------- recall ----
+def test_ivf_recall_on_clustered_data(rng):
+    emb, centers = _clustered(rng)
+    q = (centers[:8] + 0.1 * rng.standard_normal((8, centers.shape[1])))
+    q = q.astype(np.float32)
+    brute = BruteIndex.build(emb)
+    ivf = IVFIndex.build(emb, n_clusters=16, nprobe=16)  # nprobe == C
+    _, bi = brute.search(q, 10)
+    _, ii = ivf.search(q, 10)
+    rec = np.mean([
+        len(set(np.asarray(ii[r]).tolist())
+            & set(np.asarray(bi[r]).tolist())) / 10
+        for r in range(8)
+    ])
+    assert rec >= 0.9, rec  # all lists probed -> should be (near-)exact
+
+
+def test_ivf_recall_degrades_gracefully_with_fewer_probes(rng):
+    emb, centers = _clustered(rng)
+    q = centers[:8].astype(np.float32)
+    ivf = IVFIndex.build(emb, n_clusters=16, nprobe=2)
+    brute = BruteIndex.build(emb)
+    _, bi = brute.search(q, 10)
+    _, ii = ivf.search(q, 10)
+    rec = np.mean([
+        len(set(np.asarray(ii[r]).tolist())
+            & set(np.asarray(bi[r]).tolist())) / 10
+        for r in range(8)
+    ])
+    assert rec >= 0.5, rec  # queries sit on centroids: 2 probes find most
+
+
+# ----------------------------------------------------- tiled scan parity ----
+@pytest.mark.parametrize("trial", range(4))
+def test_tiled_scan_bitwise_matches_dense_exact_arithmetic(trial):
+    """Integer-valued embeddings: every dot product is exactly representable
+    in fp32 regardless of summation order, so bitwise equality isolates the
+    merge/tie logic from XLA's position-dependent vectorization rounding.
+    Duplicate candidate ids force abundant exact score ties."""
+    rng = np.random.default_rng(100 + trial)
+    n, d, qn = 400, 16, 6
+    w = int(rng.integers(12, 900))
+    k = int(rng.integers(1, 24))
+    emb = jnp.asarray(rng.integers(-3, 4, (n, d)), jnp.float32)
+    q = jnp.asarray(rng.integers(-3, 4, (qn, d)), jnp.float32)
+    cand_np = rng.integers(0, n + 1, (qn, w)).astype(np.int32)
+    m = w // 3
+    cand_np[:, :m] = cand_np[:, m:2 * m]  # duplicate ids -> score ties
+    cand = jnp.asarray(cand_np)
+    cmask = jnp.asarray(rng.random((qn, w)) < 0.7) & (cand < n)
+    sd, idd = iops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=False)
+    st, idt = iops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=True,
+                                      c_blk=128)
+    np.testing.assert_array_equal(
+        np.asarray(sd).view(np.uint32), np.asarray(st).view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(idd), np.asarray(idt))
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_tiled_scan_float_matches_dense_within_ulp(trial):
+    """Float data: XLA CPU's einsum rounds position-dependently (the same id
+    at two positions can differ by 1 ULP even within the dense path), so the
+    contract is allclose scores + identical ids away from near-ties."""
+    rng = np.random.default_rng(200 + trial)
+    n, d, qn = 400, 16, 6
+    w = int(rng.integers(12, 900))
+    k = int(rng.integers(1, 24))
+    emb = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((qn, d)), jnp.float32)
+    cand = jnp.asarray(rng.integers(0, n + 1, (qn, w)), jnp.int32)
+    cmask = jnp.asarray(rng.random((qn, w)) < 0.7) & (cand < n)
+    sd, idd = iops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=False)
+    st, idt = iops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=True,
+                                      c_blk=128)
+    sd, st, idd, idt = map(np.asarray, (sd, st, idd, idt))
+    np.testing.assert_allclose(st, sd, rtol=1e-6, atol=1e-6)
+    # ids must agree wherever the rank is not decided by a near-tie
+    gap_prev = np.abs(np.diff(sd, axis=1, prepend=np.inf))
+    gap_next = np.abs(np.diff(sd, axis=1, append=-np.inf))
+    clear = np.minimum(gap_prev, gap_next) > 1e-4
+    np.testing.assert_array_equal(idd[clear], idt[clear])
+
+
+def test_tiled_scan_all_masked_rows():
+    """Fewer valid candidates than k: -inf tail, same ids as the oracle.
+    Integer-valued data keeps the comparison exact (see above)."""
+    rng = np.random.default_rng(7)
+    n, d, qn, w, k = 200, 8, 3, 300, 6
+    emb = jnp.asarray(rng.integers(-3, 4, (n, d)), jnp.float32)
+    q = jnp.asarray(rng.integers(-3, 4, (qn, d)), jnp.float32)
+    cand = jnp.asarray(rng.integers(0, n, (qn, w)), jnp.int32)
+    cmask = jnp.zeros((qn, w), bool).at[:, :2].set(True)  # 2 valid < k
+    sd, idd = iops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=False)
+    st, idt = iops.ivf_candidate_scan(q, emb, cand, cmask, k, tiled=True,
+                                      c_blk=64)
+    assert np.all(np.isneginf(np.asarray(sd)[:, 2:]))
+    np.testing.assert_array_equal(
+        np.asarray(sd).view(np.uint32), np.asarray(st).view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(idd), np.asarray(idt))
+
+
+def test_ivf_search_tiled_matches_dense_end_to_end():
+    from repro.core.indexing import _ivf_search, l2_normalize
+
+    rng = np.random.default_rng(11)
+    emb, _ = _clustered(rng, n_centers=6, per=80)
+    ivf = IVFIndex.build(emb, n_clusters=8, nprobe=3)
+    q = l2_normalize(jnp.asarray(rng.standard_normal((5, emb.shape[1])),
+                                 jnp.float32))
+    args = (ivf.emb, ivf.centroids, ivf.lists, ivf.list_mask, q,
+            ivf.nprobe, 7)
+    sd, idd = _ivf_search(*args, tiled=False)
+    st, idt = _ivf_search(*args, tiled=True)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sd),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idd), np.asarray(idt))
+
+
+# ------------------------------------------------------------ list build ----
+def test_build_inverted_lists_matches_loop(rng):
+    for n, c in [(0, 4), (1, 1), (37, 5), (400, 7)]:
+        assign = rng.integers(0, c, n).astype(np.int64)
+        lists, mask = build_inverted_lists(assign, n, c)
+        counts = np.bincount(assign, minlength=c)
+        pad = max(8, int(counts.max()) if n else 8)
+        ref = np.full((c, pad), n, np.int32)
+        fill = np.zeros(c, np.int64)
+        for i in np.argsort(assign, kind="stable"):
+            cl = assign[i]
+            ref[cl, fill[cl]] = i
+            fill[cl] += 1
+        np.testing.assert_array_equal(lists, ref)
+        np.testing.assert_array_equal(mask, ref < n)
+
+
+def test_build_inverted_lists_empty_cluster(rng):
+    assign = np.zeros(10, np.int64)  # every point in cluster 0
+    lists, mask = build_inverted_lists(assign, 10, 4)
+    assert mask[0].sum() == 10 and mask[1:].sum() == 0
+    np.testing.assert_array_equal(np.sort(lists[0][mask[0]]), np.arange(10))
+
+
+# ------------------------------------------------------------ degenerate ----
+def test_kmeans_more_clusters_than_points(rng):
+    x = jnp.asarray(rng.standard_normal((5, 8)), jnp.float32)
+    cent, assign = kmeans(x, 12)  # used to crash choice(replace=False)
+    assert cent.shape == (12, 8) and assign.shape == (5,)
+    assert int(assign.max()) < 12
+
+
+def test_ivf_build_clamps_clusters_and_nprobe(rng):
+    emb = rng.standard_normal((6, 8)).astype(np.float32)
+    ivf = IVFIndex.build(emb, n_clusters=32, nprobe=64)
+    assert ivf.centroids.shape[0] <= 6
+    assert ivf.nprobe <= ivf.centroids.shape[0]
+    s, i = ivf.search(rng.standard_normal((2, 8)).astype(np.float32), 6)
+    # every real node reachable: all 6 ids found across the probed lists
+    assert set(np.asarray(i).flatten().tolist()) <= set(range(6))
+    bs, bi = BruteIndex.build(emb).search(
+        rng.standard_normal((2, 8)).astype(np.float32), 6)
+    assert s.shape == bs.shape
+
+
+def test_ivf_keeps_requested_k_when_candidates_are_narrow(rng):
+    """k larger than the probed candidate width still yields (Q, k):
+    the tail is (-inf, sentinel) padding, not a silently narrower array."""
+    emb = rng.standard_normal((30, 8)).astype(np.float32)
+    ivf = IVFIndex.build(emb, n_clusters=8, nprobe=1)
+    w = ivf.nprobe * ivf.lists.shape[1]
+    k = w + 5
+    s, i = ivf.search(rng.standard_normal((3, 8)).astype(np.float32), k)
+    assert s.shape == (3, k) and i.shape == (3, k)
+    assert np.all(np.isneginf(np.asarray(s)[:, w:]))
+    assert np.all(np.asarray(i)[:, w:] == 30)
+
+
+def test_ivf_empty_cluster_probe_is_safe(rng):
+    # duplicate points force empty clusters; probing them must not crash
+    # or emit sentinel ids as results when real candidates exist
+    emb = np.tile(rng.standard_normal((3, 8)).astype(np.float32), (20, 1))
+    ivf = IVFIndex.build(emb, n_clusters=8, nprobe=8)
+    s, i = ivf.search(emb[:4], 5)
+    assert int(np.asarray(i).max()) < 60
+    assert np.isfinite(np.asarray(s)).all()

@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import (
     BruteIndex, GraphTokenizer, PipelineConfig, RGLPipeline, Vocab,
+    index_from_config,
 )
 from repro.core import naive
 from repro.core.tokenization import subgraph_texts
@@ -138,6 +139,34 @@ def test_fused_engine_batch_matches_reference(stack):
     assert set(done) == {0, 1, 2, 3}
     assert eng.retrieval_batches == 1  # one jitted call for the whole wave
     for qi in range(4):
+        assert done[qi].out_tokens[:MAX_NEW] == _reference_tokens(
+            g, pipe, cfg, params, qi
+        )
+
+
+def test_fused_engine_on_sharded_index_matches_brute_reference(stack):
+    """RAGServeEngine admission works unchanged on a sharded index: with
+    ``index_kind="sharded"`` the fused engine emits tokens identical to the
+    brute-index reference path (sharded brute search is bit-identical)."""
+    g, pipe, cfg, params = stack
+    pcfg = PipelineConfig(strategy="bfs", k_seeds=3, max_hops=2,
+                          max_nodes=16, filter_budget=8,
+                          index_kind="sharded", index_shards=3)
+    sharded_pipe = RGLPipeline(
+        graph=pipe.graph,
+        index=index_from_config(jnp.asarray(g.node_feat), pcfg),
+        node_emb=pipe.node_emb, tokenizer=pipe.tokenizer,
+        node_text=g.node_text, config=pcfg,
+    )
+    eng = RAGServeEngine(sharded_pipe, params, cfg, slots=4,
+                         cache_len=CACHE_LEN)
+    for qi in range(4):
+        eng.submit(RAGRequest(uid=qi, query_emb=np.asarray(g.node_feat[qi]),
+                              query_text=g.node_text[qi],
+                              max_new_tokens=MAX_NEW))
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert set(done) == {0, 1, 2, 3}
+    for qi in range(4):  # reference runs on the brute-index pipeline
         assert done[qi].out_tokens[:MAX_NEW] == _reference_tokens(
             g, pipe, cfg, params, qi
         )
