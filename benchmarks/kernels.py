@@ -70,6 +70,21 @@ def run():
     t_hop = _time(bref.frontier_hop, fr, nbr2, mk2)
     rows.append({"name": "bfs_hop_ref_64x20k", "us_per_call": t_hop,
                  "derived": "frontier hop, 64 queries batched"})
+
+    from repro.kernels.frontier_expand import ops as fops
+
+    c = 1024
+    ws = np.full((16, c), 20_000, np.int32)
+    for qi in range(16):
+        ws[qi, :c // 2] = np.sort(rng.choice(20_000, c // 2, replace=False))
+    wd = np.where(ws < 20_000, 1, int(fops.INF)).astype(np.int32)
+    t_exp = _time(
+        lambda a, b: fops.expand_hop(a, b, nbr2, mk2, 2, band=5,
+                                     use_kernel=False)[0],
+        jnp.asarray(ws), jnp.asarray(wd),
+    )
+    rows.append({"name": "frontier_expand_16x1k_ref", "us_per_call": t_exp,
+                 "derived": "workset hop: gather+dedup-merge, O(C*K)"})
     return rows
 
 

@@ -1,14 +1,21 @@
-"""Paper Fig. 2/4: retrieval time vs query count, naive vs RGL-batched.
+"""Paper Fig. 2/4: retrieval time vs query count, naive vs RGL-batched —
+plus the corpus-size sweep for the workset-compacted backend.
 
-The naive side is the NetworkX-class pure-Python implementation
-(repro.core.naive) run per query; the RGL side is the batched jit'd frontier
-algebra.  We report per-strategy wall time at each query count, the speedup
-ratio, and the learning-time context (one GIN training step on the same
-graph), reproducing the figure's stacked structure.  CPU-only container:
-RATIOS are the reproduction target, not absolute times.
+``run`` reproduces the figure: the naive side is the NetworkX-class
+pure-Python implementation (repro.core.naive) run per query; the RGL side
+is the batched jit'd frontier algebra.  We report per-strategy wall time
+at each query count, the speedup ratio, and the learning-time context (one
+GIN training step on the same graph).  CPU-only container: RATIOS are the
+reproduction target, not absolute times.
+
+``run_corpus_sweep`` measures the claim behind the compact backend: dense
+stage-3 cost grows with N (full-graph gathers per hop) while compact cost
+is bounded by the workset capacity, so speedup grows with corpus size.
+Results persist to ``BENCH_retrieval_scaling.json`` via ``write_json``.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -17,7 +24,7 @@ import numpy as np
 
 from repro.core import graph_retrieval as gr
 from repro.core import naive
-from repro.graph import csr_to_ell, generators
+from repro.graph import CSRGraph, csr_to_ell, generators
 from repro.models.gnn import GNNConfig, gnn_loss, init_gnn
 
 
@@ -101,12 +108,123 @@ def run(n_nodes: int = 20_000, query_counts=(10, 100, 1000), seed: int = 0,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Corpus-size sweep: dense (O(N) per hop) vs compact (O(workset_cap) per hop)
+# ---------------------------------------------------------------------------
+
+# dense-path measurement ceilings: beyond these N the dense leg is skipped
+# (steiner's dense bridge tables are (Q, N*K); dense peeling re-gathers
+# (Q, N, K) per round) — the compact leg always runs.
+_DENSE_N_CEILING = {"bfs": None, "ppr": None, "dense": 200_000,
+                    "steiner": 50_000}
+
+
+def _random_ell(n: int, out_deg: int, max_deg: int, seed: int):
+    """Vectorized uniform random graph (the PA generator is a Python loop —
+    unusable at 500k nodes).  Symmetrized, ELL degree capped at max_deg."""
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, n, size=(n, out_deg), dtype=np.int64)
+    src = np.repeat(np.arange(n, dtype=np.int64), out_deg)
+    g = CSRGraph.from_edges(src, dst.ravel(), n, symmetrize=True)
+    return csr_to_ell(g, max_deg=max_deg)
+
+
+def _time_call(fn, repeats: int) -> float:
+    out = fn()
+    jax.block_until_ready(out.nodes)  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.nodes)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_corpus_sweep(
+    corpus_sizes=(50_000, 200_000, 500_000),
+    strategies=("bfs", "dense", "steiner", "ppr"),
+    n_queries: int = 16,
+    n_seeds: int = 4,
+    max_nodes: int = 32,
+    workset_cap: int = 4096,
+    out_deg: int = 4,
+    max_deg: int = 32,
+    repeats: int = 2,
+    seed: int = 0,
+) -> dict:
+    kw = {
+        "bfs": dict(max_hops=3, max_nodes=max_nodes),
+        "dense": dict(max_hops=2, max_nodes=max_nodes),
+        "steiner": dict(max_hops=3, max_nodes=max_nodes),
+        "ppr": dict(max_nodes=max_nodes),
+    }
+    rng = np.random.default_rng(seed)
+    results = []
+    for n in corpus_sizes:
+        ell = _random_ell(n, out_deg, max_deg, seed)
+        seeds = jnp.asarray(
+            rng.integers(0, n, size=(n_queries, n_seeds)).astype(np.int32)
+        )
+        for strat in strategies:
+            compact = lambda: gr.retrieve_subgraph(  # noqa: E731
+                ell, seeds, strat, mode="compact", workset_cap=workset_cap,
+                **kw[strat],
+            )
+            t_compact = _time_call(compact, repeats)
+            sub = compact()
+            ovf = float(np.asarray(sub.overflow).mean())
+            ceiling = _DENSE_N_CEILING[strat]
+            if ceiling is not None and n > ceiling:
+                results.append({
+                    "n": n, "strategy": strat, "compact_s": t_compact,
+                    "compact_overflow_frac": ovf, "dense_s": None,
+                    "speedup": None,
+                    "dense_skipped": f"dense {strat} capped at N<={ceiling}",
+                })
+                continue
+            dense = lambda: gr.retrieve_subgraph(  # noqa: E731
+                ell, seeds, strat, mode="dense", **kw[strat]
+            )
+            t_dense = _time_call(dense, repeats)
+            results.append({
+                "n": n, "strategy": strat, "compact_s": t_compact,
+                "compact_overflow_frac": ovf, "dense_s": t_dense,
+                "speedup": t_dense / max(t_compact, 1e-9),
+                "dense_skipped": None,
+            })
+    return {
+        "config": {
+            "corpus_sizes": list(corpus_sizes), "strategies": list(strategies),
+            "n_queries": n_queries, "n_seeds": n_seeds,
+            "max_nodes": max_nodes, "workset_cap": workset_cap,
+            "out_deg": out_deg, "max_deg": max_deg, "repeats": repeats,
+            "backend": jax.default_backend(),
+        },
+        "results": results,
+    }
+
+
+def write_json(report: dict, path: str = "BENCH_retrieval_scaling.json"):
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+
+
 def main():
     rows = run()
     print("name,queries,seconds,speedup_vs_naive")
     for r in rows:
         print(f"{r['name']},{r['queries']},{r['seconds']:.4f},{r['speedup']:.1f}")
-    return rows
+    rep = run_corpus_sweep()
+    write_json(rep)
+    print("strategy,n,dense_s,compact_s,speedup,overflow_frac")
+    for r in rep["results"]:
+        d = "skip" if r["dense_s"] is None else f"{r['dense_s']:.4f}"
+        s = "-" if r["speedup"] is None else f"{r['speedup']:.2f}x"
+        print(f"{r['strategy']},{r['n']},{d},{r['compact_s']:.4f},{s},"
+              f"{r['compact_overflow_frac']:.2f}")
+    return rows, rep
 
 
 if __name__ == "__main__":

@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * serving             — fused RAG serving (also writes BENCH_rag_serving.json)
   * sharding            — sharded index + tiled IVF scan (also writes
                           BENCH_index_sharding.json)
+  * scaling             — dense vs workset-compacted subgraph construction
+                          over a corpus-size sweep (also writes
+                          BENCH_retrieval_scaling.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 """
@@ -20,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
-        "sharding",
+        "sharding", "scaling",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
@@ -65,6 +68,16 @@ def main() -> None:
             print(f"sharding/n={r['n']},{r['brute_sharded_s'] * 1e6:.0f},"
                   f"brute_sharded={r['brute_sharded_speedup']:.2f}x;"
                   f"ivf_tiled={r['ivf_tiled_speedup']:.2f}x")
+    if args.only in (None, "scaling"):
+        kw = dict(corpus_sizes=(20_000, 50_000), repeats=1) if args.fast \
+            else {}
+        rep = retrieval_scaling.run_corpus_sweep(**kw)
+        retrieval_scaling.write_json(rep)
+        for r in rep["results"]:
+            spd = "-" if r["speedup"] is None else f"{r['speedup']:.2f}x"
+            print(f"scaling/{r['strategy']}@n={r['n']},"
+                  f"{r['compact_s'] * 1e6:.0f},dense_vs_compact={spd};"
+                  f"overflow={r['compact_overflow_frac']:.2f}")
 
 
 if __name__ == "__main__":

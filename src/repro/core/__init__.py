@@ -9,6 +9,7 @@ from repro.core.graph_retrieval import (
     bfs_distances,
     induced_adjacency,
 )
+from repro.core.workset import Workset, build_workset, workset_adjacency
 from repro.core.indexing import BruteIndex, IVFIndex, build_index
 from repro.core.sharding import ShardedIndex, hierarchical_topk_merge
 from repro.core.filters import dynamic_filter, similarity_scores
@@ -19,6 +20,7 @@ __all__ = [
     "RGLPipeline", "PipelineConfig", "index_from_config", "Subgraph",
     "bfs_subgraph", "dense_subgraph", "steiner_subgraph", "retrieve_subgraph",
     "bfs_distances", "induced_adjacency",
+    "Workset", "build_workset", "workset_adjacency",
     "BruteIndex", "IVFIndex", "ShardedIndex", "build_index",
     "hierarchical_topk_merge",
     "dynamic_filter", "similarity_scores",

@@ -42,6 +42,7 @@ def dynamic_filter(
         mask=mask,
         dist=jnp.where(mask, dist, INF),
         num_nodes=n,
+        overflow=sub.overflow,  # preserve the compact backend's flags
     )
 
 

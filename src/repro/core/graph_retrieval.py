@@ -13,6 +13,19 @@ strategies — RGL-BFS, RGL-Dense, RGL-Steiner — are implemented as
 * Dense        — greedy peeling: the k-hop candidate ball is refined by
                  iterated internal-degree ranking (densest-subgraph heuristic).
 
+Every strategy exists in two backends sharing one output contract:
+
+* **dense**   — per-hop work is O(N): full-graph gathers, full-graph ranking.
+                Exact, simple, and fine while N is small.
+* **compact** — per-hop work is O(C): seeds are expanded into a fixed-capacity
+                sorted *workset* of C candidate ids (:mod:`repro.core.workset`,
+                backed by the ``kernels.frontier_expand`` mark kernel), and the
+                strategy runs over the workset-local induced adjacency.  When
+                no query overflows the capacity, the output — nodes, mask,
+                dist, including tie order — is bitwise identical to the dense
+                backend; overflow is reported per query so callers can fall
+                back (``mode="auto"`` does so automatically).
+
 Everything is batched over queries (the paper's core speedup mechanism:
 amortize per-query overhead) and jit-compiled; graphs must be symmetric
 (generators symmetrize; pull-BFS reads in-neighbors).
@@ -25,24 +38,41 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.workset import Workset, build_workset, localize, workset_adjacency
 from repro.graph.ell import ELLGraph
+from repro.kernels.bfs_frontier import ops as bfs_frontier_ops
 
 INF = jnp.int32(0x3FFFFFF)
+
+# graphs at least this large route to the compact backend under mode="auto";
+# set from the measured dense/compact crossover (BENCH_retrieval_scaling.json:
+# compact loses below ~100k nodes on CPU, wins 3-15x above 200k)
+AUTO_COMPACT_MIN_NODES = 100_000
 
 
 @dataclasses.dataclass
 class Subgraph:
-    """Padded per-query subgraph: ``nodes`` ordered by retrieval priority."""
+    """Padded per-query subgraph: ``nodes`` ordered by retrieval priority.
+
+    ``overflow`` is only populated by the compact backend: True for queries
+    whose candidate ball exceeded the workset capacity (output truncated
+    deterministically, no longer dense-parity).  ``None`` means the dense
+    backend ran (never truncates).
+    """
 
     nodes: jnp.ndarray  # (Q, M) int32, sentinel = num_nodes where ~mask
     mask: jnp.ndarray  # (Q, M) bool
     dist: jnp.ndarray  # (Q, M) int32 hop distance of each picked node
     num_nodes: int  # N of the parent graph
+    overflow: Optional[jnp.ndarray] = None  # (Q,) bool, compact backend only
 
 
 jax.tree_util.register_dataclass(
-    Subgraph, data_fields=["nodes", "mask", "dist"], meta_fields=["num_nodes"]
+    Subgraph,
+    data_fields=["nodes", "mask", "dist", "overflow"],
+    meta_fields=["num_nodes"],
 )
 
 
@@ -53,14 +83,6 @@ def seeds_to_mask(seeds: jnp.ndarray, n: int) -> jnp.ndarray:
     safe = jnp.where(valid, seeds, 0)
     base = jnp.zeros((q, n), bool)
     return base.at[jnp.arange(q)[:, None], safe].max(valid)
-
-
-def _frontier_hop(nbr, nbr_mask, frontier):
-    """One pull hop: reach[q, v] = OR_k frontier[q, nbr[v, k]]."""
-    q = frontier.shape[0]
-    fp = jnp.concatenate([frontier, jnp.zeros((q, 1), bool)], axis=1)  # (Q, N+1)
-    gathered = fp[:, nbr]  # (Q, N, K)
-    return jnp.any(gathered & nbr_mask[None], axis=-1)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops",))
@@ -75,7 +97,9 @@ def bfs_distances(
 
     def hop(carry, h):
         dist, frontier = carry
-        reach = _frontier_hop(nbr, nbr_mask, frontier)
+        # one pull hop through the kernels.bfs_frontier op: Pallas-tiled on
+        # TPU, the pure-jnp gather elsewhere (size-gated inside the op)
+        reach = bfs_frontier_ops.frontier_hop(frontier, nbr, nbr_mask)
         new = reach & (dist == INF)
         dist = jnp.where(new, h + 1, dist)
         return (dist, new), None
@@ -145,6 +169,38 @@ def _select_by_key(key: jnp.ndarray, keep: jnp.ndarray, m: int, n: int):
     return nodes, mask, jnp.where(mask, -topv, INF)
 
 
+def _select_ws(key: jnp.ndarray, keep: jnp.ndarray, ws: Workset, m: int):
+    """Workset-local ``_select_by_key``: same keys, positions mapped back to
+    global ids.  Keys embed the global node id, so with identical (key, keep)
+    sets the selection — values, order, padding — matches the dense path.
+
+    Returns (nodes (Q,m) int32 global, mask (Q,m) bool, topi (Q,m) positions).
+    """
+    n = ws.num_nodes
+    big = jnp.int32(0x7FFFFFF0)
+    k = jnp.where(keep & (ws.ids < n), key, big)
+    topv, topi = jax.lax.top_k(-k, m)
+    mask = topv > -big
+    nodes = jnp.where(mask, jnp.take_along_axis(ws.ids, topi, 1), n)
+    return nodes.astype(jnp.int32), mask, topi
+
+
+def _gather_local(rowvals: jnp.ndarray, wnbr: jnp.ndarray, fill):
+    """Gather per-slot values over the local adjacency with a slack column.
+
+    rowvals (Q, C); wnbr (Q, C, K) positions with sentinel C; ``fill`` is the
+    value served for sentinel slots.  Returns (Q, C, K).
+    """
+    q, c, k = wnbr.shape
+    padded = jnp.concatenate(
+        [rowvals, jnp.full((q, 1), fill, rowvals.dtype)], axis=1
+    )
+    return jnp.take_along_axis(padded, wnbr.reshape(q, c * k), 1).reshape(q, c, k)
+
+
+# ---------------------------------------------------------------- BFS --------
+
+
 @functools.partial(jax.jit, static_argnames=("max_hops", "max_nodes"))
 def bfs_subgraph(
     nbr: jnp.ndarray,
@@ -164,6 +220,34 @@ def bfs_subgraph(
     nodes, mask, _ = _select_by_key(key, keep, max_nodes, n)
     dsel = jnp.where(mask, jnp.take_along_axis(d, jnp.minimum(nodes, n - 1), 1), INF)
     return Subgraph(nodes=nodes, mask=mask, dist=dsel, num_nodes=n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_hops", "max_nodes", "workset_cap")
+)
+def bfs_subgraph_compact(
+    nbr: jnp.ndarray,
+    nbr_mask: jnp.ndarray,
+    seeds: jnp.ndarray,  # (Q, S)
+    *,
+    max_hops: int = 3,
+    max_nodes: int = 64,
+    workset_cap: int = 2048,
+) -> Subgraph:
+    """RGL-BFS over the workset: O(C) per hop instead of O(N)."""
+    n = nbr.shape[0]
+    ws = build_workset(
+        nbr, nbr_mask, seeds, max_hops=max_hops, cap=workset_cap
+    )
+    key = ws.dist * jnp.int32(n) + jnp.where(ws.ids < n, ws.ids, 0)
+    nodes, mask, topi = _select_ws(key, ws.ids < n, ws, max_nodes)
+    dsel = jnp.where(mask, jnp.take_along_axis(ws.dist, topi, 1), INF)
+    return Subgraph(
+        nodes=nodes, mask=mask, dist=dsel, num_nodes=n, overflow=ws.overflow
+    )
+
+
+# ---------------------------------------------------------------- Dense ------
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops", "max_nodes", "n_rounds"))
@@ -209,6 +293,148 @@ def dense_subgraph(
     return Subgraph(nodes=nodes, mask=mask, dist=dsel, num_nodes=n)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_hops", "max_nodes", "n_rounds", "workset_cap"),
+)
+def dense_subgraph_compact(
+    nbr: jnp.ndarray,
+    nbr_mask: jnp.ndarray,
+    seeds: jnp.ndarray,
+    *,
+    max_hops: int = 2,
+    max_nodes: int = 64,
+    n_rounds: int = 3,
+    workset_cap: int = 2048,
+) -> Subgraph:
+    """RGL-Dense over the workset: peeling scores C nodes per round, not N."""
+    n, k = nbr.shape
+    ws = build_workset(
+        nbr, nbr_mask, seeds, max_hops=max_hops, cap=workset_cap
+    )
+    wnbr, wmask = workset_adjacency(nbr, nbr_mask, ws.ids)
+    valid = ws.ids < n
+    sm = valid & (ws.dist == 0)  # seed slots: the distinct valid seeds
+    cand0 = valid  # every workset entry is inside the max_hops ball
+
+    def indeg(c):
+        g = _gather_local(c, wnbr, False) & wmask
+        return jnp.sum(g, axis=-1).astype(jnp.int32) * c
+
+    def round_(c, _):
+        deg = indeg(c)
+        kth = jax.lax.top_k(
+            jnp.where(c, deg, -1), min(max_nodes, workset_cap)
+        )[0][:, -1]
+        keep = c & (deg >= kth[:, None])
+        keep = keep | sm
+        return keep, None
+
+    cand, _ = jax.lax.scan(round_, cand0, None, length=n_rounds)
+    deg = indeg(cand)
+    d = jnp.minimum(ws.dist, max_hops + 1)
+    gid = jnp.where(valid, ws.ids, 0)
+    key = (jnp.int32(k + 1) - deg) * jnp.int32((max_hops + 2) * n) \
+        + d * jnp.int32(n) + gid
+    key = jnp.where(sm, gid, key)
+    nodes, mask, topi = _select_ws(key, cand, ws, max_nodes)
+    dsel = jnp.where(mask, jnp.take_along_axis(d, topi, 1), INF)
+    return Subgraph(
+        nodes=nodes, mask=mask, dist=dsel, num_nodes=n, overflow=ws.overflow
+    )
+
+
+# ---------------------------------------------------------------- Steiner ----
+
+
+def _seg_min(vals, segs, t):
+    return jax.vmap(
+        lambda v, s: jax.ops.segment_min(v, s, num_segments=t * t)
+    )(vals, segs)
+
+
+def _terminal_metric(d_src, d_dst, l_src, l_dst, e_mask, eid, t, eid_sentinel):
+    """Terminal-pair shortest-path metric from bridge edges.
+
+    All inputs are flattened edge tables (Q, E) — the dense path passes the
+    full N*K edge set, the compact path the C*K workset edge set; ``eid``
+    carries *global* edge ids in both, so the per-pair argmin tie-break is
+    backend independent.  Returns (w (Q,T,T) symmetric pair lengths with INF
+    diagonal, best_eid (Q,T,T) global edge id realizing each pair).
+    """
+    q = d_src.shape[0]
+    e_ok = (
+        e_mask
+        & (l_src < t) & (l_dst < t) & (l_src != l_dst)
+        & (d_src < INF) & (d_dst < INF)
+    )
+    plen = jnp.where(e_ok, d_src + 1 + d_dst, INF)  # (Q, E)
+    pair = jnp.where(e_ok, l_src * t + l_dst, 0)  # (Q, E) in [0, T*T)
+    w = _seg_min(plen, pair, t)  # (Q, T*T) pairwise path lengths
+    # best bridge edge per pair: two-pass argmin (value then edge id)
+    at_min = e_ok & (plen == jnp.take_along_axis(w, pair, axis=1))
+    best_eid = _seg_min(
+        jnp.where(at_min, eid, jnp.int32(eid_sentinel)), pair, t
+    )
+    w = w.reshape(q, t, t)
+    w = jnp.minimum(w, jnp.swapaxes(w, 1, 2))  # symmetrize
+    w = jnp.where(jnp.eye(t, dtype=bool)[None], INF, w)
+    best_eid = jnp.minimum(
+        best_eid.reshape(q, t, t), jnp.swapaxes(best_eid.reshape(q, t, t), 1, 2)
+    )
+    return w, best_eid
+
+
+def _prim_mst(w, t):
+    """Fixed-iteration Prim MST over the (Q, T, T) terminal metric."""
+    q = w.shape[0]
+    in_tree0 = jnp.zeros((q, t), bool).at[:, 0].set(True)
+
+    def prim(carry, _):
+        in_tree, edges, step = carry
+        m = jnp.where(in_tree[:, :, None] & ~in_tree[:, None, :], w, INF)
+        flat = m.reshape(q, t * t)
+        best = jnp.argmin(flat, axis=1)
+        a, b = best // t, best % t
+        ok = jnp.take_along_axis(flat, best[:, None], 1)[:, 0] < INF
+        in_tree = in_tree.at[jnp.arange(q), jnp.where(ok, b, 0)].max(ok)
+        edges = edges.at[:, step, 0].set(jnp.where(ok, a, -1))
+        edges = edges.at[:, step, 1].set(jnp.where(ok, b, -1))
+        return (in_tree, edges, step + 1), None
+
+    edges0 = jnp.full((q, max(t - 1, 1), 2), -1, jnp.int32)
+    (_, mst, _), _ = jax.lax.scan(
+        prim, (in_tree0, edges0, 0), None, length=max(t - 1, 0)
+    )
+    return mst
+
+
+def _descend_paths(marked, start, start_ok, dist, dp, row_fn, length):
+    """Walk from ``start`` toward its terminal by strict dist descent,
+    marking every visited position.  ``row_fn(cur)`` returns the (Q, K)
+    neighbor positions + mask of each query's current node — global
+    adjacency for the dense path, workset-local for the compact path."""
+    q = start.shape[0]
+
+    def body(carry, _):
+        cur, ok, mk = carry
+        mk = mk.at[jnp.arange(q), jnp.where(ok, cur, 0)].max(ok)
+        dcur = jnp.take_along_axis(dist, cur[:, None], 1)[:, 0]
+        nb, nbm = row_fn(cur)  # (Q, K) each
+        dn = jnp.take_along_axis(dp, nb, 1)  # (Q, K)
+        want = nbm & (dn == (dcur - 1)[:, None])
+        pick = jnp.argmax(want, axis=1)
+        nxt = jnp.take_along_axis(nb, pick[:, None], 1)[:, 0]
+        ok = ok & jnp.any(want, axis=1) & (dcur > 0)
+        cur = jnp.where(ok, nxt, cur)
+        return (cur, ok, mk), None
+
+    (_, _, marked), _ = jax.lax.scan(
+        body, (start, start_ok, marked), None, length=length
+    )
+    return marked
+
+
 @functools.partial(jax.jit, static_argnames=("max_hops", "max_nodes"))
 def steiner_subgraph(
     nbr: jnp.ndarray,
@@ -240,76 +466,17 @@ def steiner_subgraph(
     d_dst = dp[:, dst.reshape(-1)].reshape(q, n * k)
     l_src = label[:, src.reshape(-1)].reshape(q, n * k)
     l_dst = lp[:, dst.reshape(-1)].reshape(q, n * k)
-    e_ok = (
-        nbr_mask.reshape(-1)[None, :]
-        & (l_src < t) & (l_dst < t) & (l_src != l_dst)
-        & (d_src < INF) & (d_dst < INF)
-    )
-    plen = jnp.where(e_ok, d_src + 1 + d_dst, INF)  # (Q, N*K)
-    pair = l_src * t + l_dst  # (Q, N*K) in [0, T*T)
-    pair = jnp.where(e_ok, pair, 0)
-
-    def seg_min(vals, segs):
-        return jax.vmap(
-            lambda v, s: jax.ops.segment_min(v, s, num_segments=t * t)
-        )(vals, segs)
-
-    w = seg_min(plen, pair)  # (Q, T*T) pairwise path lengths
-    # best bridge edge per pair: two-pass argmin (value then edge id)
     eid = jnp.broadcast_to(jnp.arange(n * k, dtype=jnp.int32)[None], (q, n * k))
-    at_min = e_ok & (plen == jnp.take_along_axis(w, pair, axis=1))
-    best_eid = seg_min(jnp.where(at_min, eid, jnp.int32(n * k)), pair)  # (Q,T*T)
-    w = w.reshape(q, t, t)
-    w = jnp.minimum(w, jnp.swapaxes(w, 1, 2))  # symmetrize
-    w = jnp.where(jnp.eye(t, dtype=bool)[None], INF, w)
-    best_eid = jnp.minimum(
-        best_eid.reshape(q, t, t), jnp.swapaxes(best_eid.reshape(q, t, t), 1, 2)
+    w, best_eid = _terminal_metric(
+        d_src, d_dst, l_src, l_dst, nbr_mask.reshape(-1)[None, :],
+        eid, t, n * k,
     )
 
-    # ---- Prim MST over terminals ------------------------------------------
-    in_tree0 = jnp.zeros((q, t), bool).at[:, 0].set(True)
-
-    def prim(carry, _):
-        in_tree, edges, step = carry
-        m = jnp.where(in_tree[:, :, None] & ~in_tree[:, None, :], w, INF)
-        flat = m.reshape(q, t * t)
-        best = jnp.argmin(flat, axis=1)
-        a, b = best // t, best % t
-        ok = jnp.take_along_axis(flat, best[:, None], 1)[:, 0] < INF
-        in_tree = in_tree.at[jnp.arange(q), jnp.where(ok, b, 0)].max(ok)
-        edges = edges.at[:, step, 0].set(jnp.where(ok, a, -1))
-        edges = edges.at[:, step, 1].set(jnp.where(ok, b, -1))
-        return (in_tree, edges, step + 1), None
-
-    edges0 = jnp.full((q, max(t - 1, 1), 2), -1, jnp.int32)
-    (in_tree, mst, _), _ = jax.lax.scan(
-        prim, (in_tree0, edges0, 0), None, length=max(t - 1, 0)
-    )
+    mst = _prim_mst(w, t)
 
     # ---- mark tree nodes: terminals + bridge endpoints + backtraces --------
     marked = seeds_to_mask(seeds, n)
-
-    def descend(marked, start, start_ok):
-        """Walk from `start` toward its terminal by strict dist descent."""
-
-        def body(carry, _):
-            cur, ok, mk = carry
-            mk = mk.at[jnp.arange(q), jnp.where(ok, cur, 0)].max(ok)
-            dcur = jnp.take_along_axis(dist, cur[:, None], 1)[:, 0]
-            nb = nbr[cur]  # (Q, K)
-            nbm = nbr_mask[cur]
-            dn = jnp.take_along_axis(dp, nb, 1)  # (Q, K)
-            want = nbm & (dn == (dcur - 1)[:, None])
-            pick = jnp.argmax(want, axis=1)
-            nxt = jnp.take_along_axis(nb, pick[:, None], 1)[:, 0]
-            ok = ok & jnp.any(want, axis=1) & (dcur > 0)
-            cur = jnp.where(ok, nxt, cur)
-            return (cur, ok, mk), None
-
-        (_, _, marked), _ = jax.lax.scan(
-            body, (start, start_ok, marked), None, length=max_hops + 1
-        )
-        return marked
+    row_fn = lambda cur: (nbr[cur], nbr_mask[cur])  # noqa: E731
 
     n_mst = mst.shape[1]
     for e in range(n_mst):  # T is small (≤16); unrolled loop over MST edges
@@ -320,14 +487,133 @@ def steiner_subgraph(
         be = jnp.where(ok, be, 0)
         u, slot = be // k, be % k
         v = nbr[u, slot]
-        marked = descend(marked, u, ok)
-        marked = descend(marked, jnp.minimum(v, n - 1), ok & (v < n))
+        marked = _descend_paths(marked, u, ok, dist, dp, row_fn, max_hops + 1)
+        marked = _descend_paths(
+            marked, jnp.minimum(v, n - 1), ok & (v < n), dist, dp, row_fn,
+            max_hops + 1,
+        )
 
     d = jnp.minimum(dist, max_hops + 1)
     key = d * jnp.int32(n) + jnp.arange(n, dtype=jnp.int32)[None, :]
     nodes, mask, _ = _select_by_key(key, marked, max_nodes, n)
     dsel = jnp.where(mask, jnp.take_along_axis(d, jnp.minimum(nodes, n - 1), 1), INF)
     return Subgraph(nodes=nodes, mask=mask, dist=dsel, num_nodes=n)
+
+
+def _workset_voronoi_labels(ws: Workset, wnbr, wmask, seeds, max_hops: int):
+    """Voronoi owner labels over the workset.  ``ws.dist`` *is* the
+    multi-source BFS distance from the terminal set, so only the label
+    propagation re-runs: nodes at distance h inherit the minimum label among
+    neighbors at distance h-1 — the dense path's tie-break exactly."""
+    q, t = seeds.shape
+    n = ws.num_nodes
+    c = ws.ids.shape[1]
+    valid_s = (seeds >= 0) & (seeds < n)
+    pos, found = localize(ws.ids, jnp.where(valid_s, seeds, n))
+    ok = valid_s & found
+    slot = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (q, t))
+    qi = jnp.arange(q)[:, None]
+    tgt = jnp.where(ok, pos, c)  # slack column
+    label0 = jnp.full((q, c + 1), t, jnp.int32).at[qi, tgt].min(
+        jnp.where(ok, slot, t)
+    )[:, :c]
+
+    def prop(label, h):
+        g_l = _gather_local(label, wnbr, t)
+        g_d = _gather_local(ws.dist, wnbr, INF)
+        active = wmask & (g_d == h - 1)
+        best = jnp.min(jnp.where(active, g_l, t), axis=-1)
+        label = jnp.where(ws.dist == h, best, label)
+        return label, None
+
+    label, _ = jax.lax.scan(
+        prop, label0, jnp.arange(1, max_hops + 1, dtype=jnp.int32)
+    )
+    return label
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_hops", "max_nodes", "workset_cap")
+)
+def steiner_subgraph_compact(
+    nbr: jnp.ndarray,
+    nbr_mask: jnp.ndarray,
+    seeds: jnp.ndarray,  # (Q, T) terminals
+    *,
+    max_hops: int = 4,
+    max_nodes: int = 64,
+    workset_cap: int = 2048,
+) -> Subgraph:
+    """RGL-Steiner over the workset: the bridge scan walks C*K workset edges
+    instead of N*K, Voronoi labels propagate over the local adjacency, and
+    backtracing descends in workset coordinates."""
+    n, k = nbr.shape
+    q, t = seeds.shape
+    ws = build_workset(
+        nbr, nbr_mask, seeds, max_hops=max_hops, cap=workset_cap
+    )
+    c = ws.ids.shape[1]
+    wnbr, wmask = workset_adjacency(nbr, nbr_mask, ws.ids)
+    label = _workset_voronoi_labels(ws, wnbr, wmask, seeds, max_hops)
+
+    # ---- bridge edges over the C*K workset edge table ---------------------
+    dp = jnp.concatenate([ws.dist, jnp.full((q, 1), INF, jnp.int32)], 1)
+    lp = jnp.concatenate([label, jnp.full((q, 1), t, jnp.int32)], 1)
+    d_src = jnp.broadcast_to(ws.dist[:, :, None], (q, c, k)).reshape(q, c * k)
+    l_src = jnp.broadcast_to(label[:, :, None], (q, c, k)).reshape(q, c * k)
+    flat_nbr = wnbr.reshape(q, c * k)
+    d_dst = jnp.take_along_axis(dp, flat_nbr, 1)
+    l_dst = jnp.take_along_axis(lp, flat_nbr, 1)
+    gid = jnp.where(ws.ids < n, ws.ids, 0)
+    eid = (
+        gid[:, :, None] * jnp.int32(k)
+        + jnp.arange(k, dtype=jnp.int32)[None, None, :]
+    ).reshape(q, c * k)  # *global* edge ids: tie-break parity with dense
+    w, best_eid = _terminal_metric(
+        d_src, d_dst, l_src, l_dst, wmask.reshape(q, c * k), eid, t, n * k
+    )
+
+    mst = _prim_mst(w, t)
+
+    marked = (ws.ids < n) & (ws.dist == 0)  # terminals
+
+    def row_fn(cur):
+        nb = jnp.take_along_axis(wnbr, cur[:, None, None], 1)[:, 0]  # (Q, K)
+        nbm = jnp.take_along_axis(wmask, cur[:, None, None], 1)[:, 0]
+        return nb, nbm
+
+    n_mst = mst.shape[1]
+    for e in range(n_mst):
+        a, b = mst[:, e, 0], mst[:, e, 1]
+        ok = a >= 0
+        be = best_eid[jnp.arange(q), jnp.maximum(a, 0), jnp.maximum(b, 0)]
+        ok = ok & (be < n * k)
+        be = jnp.where(ok, be, 0)
+        u_g, slot = be // k, be % k
+        u_l, found_u = localize(ws.ids, u_g[:, None])
+        u_l, found_u = u_l[:, 0], found_u[:, 0]
+        ok = ok & found_u
+        u_l = jnp.minimum(u_l, c - 1)
+        # v is u's slot-th neighbor, already in workset coordinates
+        v_l = wnbr[jnp.arange(q), u_l, slot]
+        marked = _descend_paths(
+            marked, u_l, ok, ws.dist, dp, row_fn, max_hops + 1
+        )
+        marked = _descend_paths(
+            marked, jnp.minimum(v_l, c - 1), ok & (v_l < c), ws.dist, dp,
+            row_fn, max_hops + 1,
+        )
+
+    d = jnp.minimum(ws.dist, max_hops + 1)
+    key = d * jnp.int32(n) + gid
+    nodes, mask, topi = _select_ws(key, marked, ws, max_nodes)
+    dsel = jnp.where(mask, jnp.take_along_axis(d, topi, 1), INF)
+    return Subgraph(
+        nodes=nodes, mask=mask, dist=dsel, num_nodes=n, overflow=ws.overflow
+    )
+
+
+# ---------------------------------------------------------------- PPR --------
 
 
 @functools.partial(jax.jit, static_argnames=("n_iter", "max_nodes", "max_hops"))
@@ -374,6 +660,58 @@ def ppr_subgraph(
     return Subgraph(nodes=nodes, mask=mask, dist=rsel, num_nodes=n)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n_iter", "max_nodes", "max_hops", "workset_cap")
+)
+def ppr_subgraph_compact(
+    nbr: jnp.ndarray,
+    nbr_mask: jnp.ndarray,
+    seeds: jnp.ndarray,  # (Q, S)
+    *,
+    alpha: float = 0.85,
+    n_iter: int = 10,
+    max_nodes: int = 64,
+    max_hops: int = None,  # API parity; expansion radius is n_iter
+    workset_cap: int = 2048,
+) -> Subgraph:
+    """PPR over the workset.  After ``n_iter`` pull iterations mass reaches at
+    most ``n_iter`` hops from the seeds, so the n_iter-hop workset carries the
+    full support of p: the power method over the local adjacency is bitwise
+    the dense computation (identical per-slot summation order), and ranks of
+    all positive-mass nodes coincide."""
+    n, k = nbr.shape
+    q = seeds.shape[0]
+    ws = build_workset(nbr, nbr_mask, seeds, max_hops=n_iter, cap=workset_cap)
+    c = ws.ids.shape[1]
+    wnbr, wmask = workset_adjacency(nbr, nbr_mask, ws.ids)
+    valid = ws.ids < n
+    sm = valid & (ws.dist == 0)
+    s = sm.astype(jnp.float32)
+    s = s / jnp.maximum(s.sum(axis=1, keepdims=True), 1.0)
+    safe = jnp.minimum(ws.ids, n - 1)
+    deg = jnp.maximum(nbr_mask[safe].sum(axis=-1).astype(jnp.float32), 1.0)
+
+    def step(p, _):
+        contrib = p / deg
+        g = _gather_local(contrib, wnbr, jnp.float32(0.0))
+        pulled = jnp.sum(jnp.where(wmask, g, 0.0), axis=-1)
+        return (1 - alpha) * s + alpha * pulled, None
+
+    p, _ = jax.lax.scan(step, s, None, length=n_iter)
+    keep = ((p > 0) | sm) & valid
+    order = jnp.argsort(-p, axis=1)  # stable: ties by position = global id
+    rank = jnp.zeros_like(order).at[
+        jnp.arange(q)[:, None], order
+    ].set(jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[None], (q, c)))
+    nodes, mask, topi = _select_ws(rank, keep, ws, max_nodes)
+    rsel = jnp.where(mask, jnp.take_along_axis(rank, topi, 1), INF)
+    return Subgraph(
+        nodes=nodes, mask=mask, dist=rsel, num_nodes=n, overflow=ws.overflow
+    )
+
+
+# ---------------------------------------------------------------- dispatch ---
+
 STRATEGIES = {
     "bfs": bfs_subgraph,
     "dense": dense_subgraph,
@@ -381,13 +719,57 @@ STRATEGIES = {
     "ppr": ppr_subgraph,
 }
 
+COMPACT_STRATEGIES = {
+    "bfs": bfs_subgraph_compact,
+    "dense": dense_subgraph_compact,
+    "steiner": steiner_subgraph_compact,
+    "ppr": ppr_subgraph_compact,
+}
+
 
 def retrieve_subgraph(
-    g: ELLGraph, seeds: jnp.ndarray, strategy: str = "bfs", **kw
+    g: ELLGraph,
+    seeds: jnp.ndarray,
+    strategy: str = "bfs",
+    *,
+    mode: str = "auto",
+    workset_cap: int = 2048,
+    **kw,
 ) -> Subgraph:
-    """Strategy dispatch over an :class:`ELLGraph` (public entry point)."""
-    fn = STRATEGIES[strategy]
-    return fn(g.nbr, g.nbr_mask, jnp.asarray(seeds, jnp.int32), **kw)
+    """Strategy dispatch over an :class:`ELLGraph` (public entry point).
+
+    ``mode`` selects the backend: ``"dense"`` (O(N) per hop, never
+    truncates), ``"compact"`` (O(workset_cap) per hop, per-query
+    ``overflow`` flags), or ``"auto"`` — compact for graphs with at least
+    ``AUTO_COMPACT_MIN_NODES`` nodes (except ``ppr``, whose ``n_iter``-hop
+    expansion radius overflows any practical cap on large connected graphs
+    — it stays dense under auto), with a transparent dense re-run when any
+    query overflows.  The overflow check is host-side (one device sync);
+    inside an outer ``jax.jit`` trace the flags are tracers, so the check
+    is skipped and the compact result is returned flags-and-all.
+    """
+    if mode not in ("dense", "compact", "auto"):
+        raise ValueError(f"unknown retrieval mode: {mode!r}")
+    seeds = jnp.asarray(seeds, jnp.int32)
+    use_compact = mode == "compact" or (
+        mode == "auto"
+        and strategy != "ppr"
+        and g.num_nodes >= AUTO_COMPACT_MIN_NODES
+        and workset_cap < g.num_nodes
+    )
+    if use_compact:
+        cap = max(workset_cap, kw.get("max_nodes", 64), seeds.shape[1])
+        sub = COMPACT_STRATEGIES[strategy](
+            g.nbr, g.nbr_mask, seeds, workset_cap=cap, **kw
+        )
+        if (
+            mode == "auto"
+            and not isinstance(sub.overflow, jax.core.Tracer)
+            and bool(np.asarray(sub.overflow).any())
+        ):
+            return STRATEGIES[strategy](g.nbr, g.nbr_mask, seeds, **kw)
+        return sub
+    return STRATEGIES[strategy](g.nbr, g.nbr_mask, seeds, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=())

@@ -19,7 +19,7 @@ from repro.graph.ell import ELLGraph
 
 @dataclasses.dataclass
 class PipelineConfig:
-    strategy: str = "bfs"  # bfs | dense | steiner
+    strategy: str = "bfs"  # bfs | dense | steiner | ppr
     k_seeds: int = 4
     max_hops: int = 3
     max_nodes: int = 64
@@ -29,6 +29,9 @@ class PipelineConfig:
     # stage-1 vector index: brute | ivf | sharded | sharded_ivf
     index_kind: str = "brute"
     index_shards: Optional[int] = None  # sharded kinds; None = one per device
+    # stage-3 subgraph construction backend: dense | compact | auto
+    retrieval_mode: str = "auto"
+    workset_cap: int = 2048  # compact backend candidate capacity per query
 
 
 def index_from_config(emb, config: PipelineConfig, **kw):
@@ -65,6 +68,8 @@ class RGLPipeline:
             self.graph,
             seeds,
             self.config.strategy,
+            mode=self.config.retrieval_mode,
+            workset_cap=self.config.workset_cap,
             max_hops=self.config.max_hops,
             max_nodes=self.config.max_nodes,
         )

@@ -25,7 +25,10 @@ def frontier_hop(
 ):
     q, n = frontier.shape
     if use_kernel is None:
-        use_kernel = n >= blk_n
+        # the Pallas path only pays off where it compiles natively; off-TPU
+        # the interpret-mode fallback is orders of magnitude slower than the
+        # jnp ref, so default dispatch is TPU-and-large-enough
+        use_kernel = _on_tpu() and n >= blk_n
     if not use_kernel:
         return ref.frontier_hop(frontier, nbr, nbr_mask)
     blk = min(blk_n, n)

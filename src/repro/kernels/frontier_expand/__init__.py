@@ -1,0 +1,1 @@
+from repro.kernels.frontier_expand import ops, ref  # noqa: F401

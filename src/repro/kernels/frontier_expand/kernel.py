@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: workset membership mark via tiled binary search.
+
+The hot inner step of workset-compacted subgraph construction: each hop
+proposes ``C * K`` candidate node ids (the neighbors of every workset
+entry) and must decide, per candidate, whether it is already a member of
+the sorted workset.  The workset row (``C`` int32 ids, ascending, sentinel
+padded — C ≤ 8k ⇒ ≤ 32 KB) stays VMEM-resident per query while the
+candidate axis streams through in ``blk_w``-wide tiles:
+
+  grid = (Q, W / blk_w); per cell:
+    workset row (1, C)      int32  — indexed by query only (stays resident)
+    cand tile   (1, blk_w)  int32
+    out tile    (1, blk_w)  int8   = 1 where cand ∈ workset row
+
+Membership is a vectorized lower-bound binary search: ``ceil(log2 C)``
+rounds of VMEM row-gathers (the same in-VMEM dynamic gather the
+bfs_frontier kernel uses), all lanes advancing in lockstep — fixed trip
+count, fixed shapes, no data-dependent control flow.  This is what lets
+hop expansion cost scale with the workset (``C * K`` marks) instead of the
+graph (the dense path's ``(Q, N, K)`` gather).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mark_kernel(ws_ref, cand_ref, o_ref, *, c: int, steps: int):
+    ws = ws_ref[0]  # (C,) int32 ascending (sentinel-padded)
+    cand = cand_ref[0]  # (blk_w,) int32
+    lo = jnp.zeros(cand.shape, jnp.int32)
+    hi = jnp.full(cand.shape, c, jnp.int32)
+    # lower bound: first index with ws[idx] >= cand, lanes in lockstep
+    for _ in range(steps):
+        act = lo < hi
+        mid = jnp.where(act, (lo + hi) // 2, lo)
+        v = ws[jnp.minimum(mid, c - 1)]  # (blk_w,) in-VMEM row gather
+        go_right = act & (v < cand)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(act & ~go_right, mid, hi)
+    hit = ws[jnp.minimum(lo, c - 1)]
+    o_ref[0] = ((lo < c) & (hit == cand)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_w", "interpret"))
+def ws_mark_kernel(
+    ws_ids: jnp.ndarray,  # (Q, C) int32 sorted ascending per row
+    cand: jnp.ndarray,  # (Q, W) int32 candidate ids, W % blk_w == 0
+    *,
+    blk_w: int = 1024,
+    interpret: bool = False,
+):
+    q, c = ws_ids.shape
+    qc, w = cand.shape
+    assert qc == q and w % blk_w == 0, (q, qc, w, blk_w)
+    steps = max(1, int(c).bit_length())  # ceil(log2 C) + slack, lanes guard
+    kern = functools.partial(_mark_kernel, c=c, steps=steps)
+    return pl.pallas_call(
+        kern,
+        grid=(q, w // blk_w),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, blk_w), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_w), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((q, w), jnp.int8),
+        interpret=interpret,
+    )(ws_ids, cand)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the workset membership mark: batched searchsorted.
+
+One lower-bound binary search per candidate over the sorted workset row —
+the exact computation the Pallas kernel tiles, expressed as
+``jnp.searchsorted`` under ``vmap``.  Kept as the parity oracle and as the
+dispatch path off-TPU (XLA lowers it to the same log-round gather loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ws_member(ws_ids: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    """ws_ids (Q, C) int32 sorted ascending per row; cand (Q, W) int32.
+
+    Returns (Q, W) bool: True where the candidate id appears in its row's
+    workset.  Sentinel-padded workset slots are ordinary values — a
+    candidate equal to the pad value *will* match it; callers mask
+    sentinels themselves (repro convention: sentinel == num_nodes).
+    """
+    pos = jax.vmap(jnp.searchsorted)(ws_ids, cand)  # (Q, W) lower bound
+    c = ws_ids.shape[1]
+    hit = jnp.take_along_axis(ws_ids, jnp.minimum(pos, c - 1), axis=1)
+    return (pos < c) & (hit == cand)

@@ -65,7 +65,9 @@ def _serve_rag(cfg, args) -> None:
     tok = GraphTokenizer(vocab, max_len=96, node_budget=8)
     pcfg = PipelineConfig(strategy="bfs", k_seeds=3, max_nodes=16,
                           filter_budget=6, index_kind=args.index,
-                          index_shards=args.shards)
+                          index_shards=args.shards,
+                          retrieval_mode=args.retrieval,
+                          workset_cap=args.workset_cap)
     index = index_from_config(emb, pcfg)
     pipe = RGLPipeline(
         graph=ell, index=index, node_emb=emb, tokenizer=tok,
@@ -76,7 +78,8 @@ def _serve_rag(cfg, args) -> None:
     # tokens must fit the arena; sliding_window only bounds attention reach
     cache_len = max(cfg.sliding_window or 0, 96 + args.max_new + 1)
     eng = RAGServeEngine(pipe, params, cfg, slots=args.slots,
-                         cache_len=cache_len)
+                         cache_len=cache_len, cache_policy=args.cache_policy,
+                         cache_ttl=args.cache_ttl)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -114,6 +117,16 @@ def main():
     ap.add_argument("--shards", type=int, default=None,
                     help="shard count for sharded index kinds "
                          "(default: one per device)")
+    ap.add_argument("--retrieval", default="auto",
+                    choices=["dense", "compact", "auto"],
+                    help="stage-3 subgraph construction backend for --rag")
+    ap.add_argument("--workset-cap", type=int, default=2048,
+                    help="compact backend candidate capacity per query")
+    ap.add_argument("--cache-policy", default="lru",
+                    choices=["lru", "lfu", "ttl"],
+                    help="retrieval-cache eviction policy for --rag")
+    ap.add_argument("--cache-ttl", type=float, default=None,
+                    help="retrieval-cache entry expiry in seconds")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch).reduced_cfg

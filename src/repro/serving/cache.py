@@ -1,18 +1,34 @@
 """Retrieval cache for the fused RAG serving engine.
 
-An LRU map from *quantized query embedding* to the finished retrieval result
-(filtered subgraph membership + seed ids).  Quantization (``round(emb / eps)``)
-makes near-duplicate queries — repeated questions, embedding jitter below
-``eps`` — collapse onto one key, so a hit skips the entire index + BFS +
-filter stack.  Entries are host-side numpy (small: O(budget) ints per query),
-so the cache never holds device memory.
+A policy-driven map from *quantized query embedding* to the finished
+retrieval result (filtered subgraph membership + seed ids).  Quantization
+(``round(emb / eps)``) makes near-duplicate queries — repeated questions,
+embedding jitter below ``eps`` — collapse onto one key, so a hit skips the
+entire index + BFS + filter stack.  Entries are host-side numpy (small:
+O(budget) ints per query), so the cache never holds device memory.
+
+Eviction policies (capacity pressure):
+
+* ``lru`` — evict the least-recently-used entry (hits refresh recency).
+* ``lfu`` — evict the entry with the fewest per-entry hits; ties broken by
+  least-recent, so a cold newcomer never outlives a warm regular.
+* ``ttl`` — evict the oldest-inserted entry (insertion-order FIFO); pairs
+  naturally with an expiry window.
+
+Independently of the policy, an optional ``ttl`` (seconds) expires entries
+``ttl`` after insertion: an expired entry is dropped at lookup (counted as
+a miss + ``expired``), and ``put`` purges expired entries before falling
+back to policy eviction.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 
 import numpy as np
+
+POLICIES = ("lru", "lfu", "ttl")
 
 
 @dataclasses.dataclass
@@ -25,21 +41,46 @@ class CachedRetrieval:
     seeds: np.ndarray  # (S,) int32 seed node ids
 
 
-class RetrievalCache:
-    """LRU cache keyed on quantized query embeddings, with hit/miss counters.
+@dataclasses.dataclass
+class _Slot:
+    """Cache bookkeeping around one entry."""
 
-    ``get`` counts a hit or miss and refreshes recency; ``put`` inserts and
-    evicts the least-recently-used entry beyond ``capacity``.  ``capacity <= 0``
-    disables caching (every lookup is a miss, nothing is stored).
+    entry: CachedRetrieval
+    hits: int = 0  # per-entry hit count (drives lfu)
+    inserted_at: float = 0.0  # ttl expiry + FIFO eviction order
+
+
+class RetrievalCache:
+    """Policy-driven cache keyed on quantized query embeddings.
+
+    ``get`` counts a hit or miss (expired entries are dropped and count as
+    misses) and refreshes recency; ``put`` inserts and evicts per the
+    policy beyond ``capacity``.  ``capacity <= 0`` disables caching (every
+    lookup is a miss, nothing is stored).  ``now_fn`` is injectable so TTL
+    behavior is testable without sleeping.
     """
 
-    def __init__(self, capacity: int = 256, quant_eps: float = 1e-3):
+    def __init__(
+        self,
+        capacity: int = 256,
+        quant_eps: float = 1e-3,
+        *,
+        policy: str = "lru",
+        ttl: float | None = None,
+        now_fn=time.monotonic,
+    ):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         self.capacity = capacity
         self.quant_eps = quant_eps
-        self._data: OrderedDict[bytes, CachedRetrieval] = OrderedDict()
+        self.policy = policy
+        self.ttl = ttl
+        self._now = now_fn
+        self._data: OrderedDict[bytes, _Slot] = OrderedDict()  # recency order
         self.hits = 0
         self.misses = 0
-        self.evictions = 0
+        self.evictions = 0  # capacity evictions by the active policy
+        self.expired = 0  # ttl expiries
 
     def __len__(self) -> int:
         return len(self._data)
@@ -48,25 +89,63 @@ class RetrievalCache:
         q = np.asarray(query_emb, np.float32).ravel()
         return np.round(q / self.quant_eps).astype(np.int32).tobytes()
 
+    # -- expiry ---------------------------------------------------------------
+    def _is_expired(self, slot: _Slot, now: float) -> bool:
+        return self.ttl is not None and now - slot.inserted_at > self.ttl
+
+    def _purge_expired(self, now: float) -> None:
+        dead = [k for k, s in self._data.items() if self._is_expired(s, now)]
+        for k in dead:
+            del self._data[k]
+            self.expired += 1
+
+    # -- lookup / insert ------------------------------------------------------
     def get(self, query_emb) -> CachedRetrieval | None:
         k = self.key(query_emb)
-        entry = self._data.get(k)
-        if entry is None:
+        slot = self._data.get(k)
+        now = self._now()
+        if slot is not None and self._is_expired(slot, now):
+            del self._data[k]
+            self.expired += 1
+            slot = None
+        if slot is None:
             self.misses += 1
             return None
         self._data.move_to_end(k)
+        slot.hits += 1
         self.hits += 1
-        return entry
+        return slot.entry
+
+    def hit_count(self, query_emb) -> int:
+        """Per-entry hit count (0 if absent) — the lfu eviction signal."""
+        slot = self._data.get(self.key(query_emb))
+        return slot.hits if slot is not None else 0
+
+    def _evict_one(self, protect: bytes) -> None:
+        # the just-inserted key is never its own victim (else a 0-hit
+        # newcomer would be evicted immediately under lfu)
+        pool = [k for k in self._data if k != protect]
+        if self.policy == "lru":
+            victim = pool[0]  # OrderedDict order = least recent first
+        elif self.policy == "lfu":
+            # fewest hits; scan in recency order so ties evict least-recent
+            victim = min(pool, key=lambda k: self._data[k].hits)
+        else:  # ttl: oldest inserted first (insertion-order FIFO)
+            victim = min(pool, key=lambda k: self._data[k].inserted_at)
+        del self._data[victim]
+        self.evictions += 1
 
     def put(self, query_emb, entry: CachedRetrieval) -> None:
         if self.capacity <= 0:
             return
+        now = self._now()
         k = self.key(query_emb)
-        self._data[k] = entry
+        self._data[k] = _Slot(entry=entry, inserted_at=now)
         self._data.move_to_end(k)
+        if len(self._data) > self.capacity:
+            self._purge_expired(now)
         while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
-            self.evictions += 1
+            self._evict_one(protect=k)
 
     def stats(self) -> dict:
         total = self.hits + self.misses
@@ -74,6 +153,8 @@ class RetrievalCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "expired": self.expired,
+            "policy": self.policy,
             "size": len(self._data),
             "hit_rate": self.hits / total if total else 0.0,
         }

@@ -13,10 +13,12 @@ inside one engine.  Two amortization mechanisms drive throughput:
   whole admission batch (padded to a fixed shape), instead of per-request
   retrieval dispatches.  This is the paper's core batching speedup applied at
   serve time.
-* **Retrieval caching** — an LRU :class:`~repro.serving.cache.RetrievalCache`
-  keyed on quantized query embeddings lets repeated / near-duplicate queries
-  skip index + BFS + filter entirely.  Hit/miss counters are exposed as
-  ``engine.cache_hits`` / ``engine.cache_misses``.
+* **Retrieval caching** — a policy-driven (lru / lfu / ttl, optional expiry)
+  :class:`~repro.serving.cache.RetrievalCache` keyed on quantized query
+  embeddings lets repeated / near-duplicate queries skip index + BFS + filter
+  entirely.  Hit/miss counters are exposed as ``engine.cache_hits`` /
+  ``engine.cache_misses``; pick the policy via ``cache_policy`` /
+  ``cache_ttl`` engine kwargs.
 
 Generation itself rides the slot-based :class:`~repro.serving.engine.ServeEngine`
 (one jitted decode step for all slots, masked batched prefill admission).
@@ -75,6 +77,8 @@ class RAGServeEngine:
         retrieval_cache: Optional[RetrievalCache] = None,
         cache_capacity: int = 256,
         quant_eps: float = 1e-3,
+        cache_policy: str = "lru",
+        cache_ttl: Optional[float] = None,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
@@ -89,7 +93,8 @@ class RAGServeEngine:
             params, cfg, slots=slots, cache_len=cache_len, eos_id=eos_id
         )
         self.cache = retrieval_cache if retrieval_cache is not None else \
-            RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps)
+            RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps,
+                           policy=cache_policy, ttl=cache_ttl)
         self.pending: deque = deque()
         self._inflight: dict = {}  # inner uid -> RAGRequest
         # amortization telemetry

@@ -12,6 +12,7 @@ import pytest
 
 from repro.kernels.bfs_frontier import ops as bops, ref as bref
 from repro.kernels.ell_spmm import ops as eops, ref as eref
+from repro.kernels.frontier_expand import ops as fops, ref as fref
 from repro.kernels.topk_sim import ops as tops, ref as tref
 
 
@@ -56,6 +57,51 @@ def test_bfs_frontier_kernel_parity(rng, trial):
     r_k = bops.frontier_hop(fr, nbr, msk, use_kernel=True)
     r_r = bref.frontier_hop(fr, nbr, msk)
     np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+
+def _sorted_workset(rng, q, c, n):
+    """Random sorted-ascending workset rows with sentinel padding."""
+    ws = np.full((q, c), n, np.int32)
+    for qi in range(q):
+        fill = int(rng.integers(1, c + 1))
+        ws[qi, :fill] = np.sort(
+            rng.choice(n, size=min(fill, n), replace=False)
+        )[:fill]
+    return ws
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_ws_member_kernel_parity(rng, trial):
+    """Pallas binary-search mark (interpret mode) vs the searchsorted ref."""
+    q = int(rng.integers(1, 5))
+    c = int(rng.integers(16, 300))
+    n = int(rng.integers(c, 4000))
+    w = int(rng.integers(10, 5000))
+    ws = jnp.asarray(_sorted_workset(rng, q, c, n))
+    cand = jnp.asarray(rng.integers(0, n + 1, (q, w)), jnp.int32)
+    m_k = fops.ws_member(ws, cand, use_kernel=True)
+    m_r = fref.ws_member(ws, cand)
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_expand_hop_kernel_vs_ref_arm(rng, trial):
+    """The kernel-marked and pure-sort hop expansions are bit-identical."""
+    n = int(rng.integers(100, 800))
+    k = int(rng.integers(2, 10))
+    q = int(rng.integers(1, 4))
+    c = int(rng.integers(8, 64))
+    nbr = jnp.asarray(rng.integers(0, n + 1, (n, k)), jnp.int32)
+    msk = jnp.asarray(rng.random((n, k)) < 0.7)
+    ws = _sorted_workset(rng, q, c, n)
+    dist = np.where(
+        ws < n, rng.integers(0, 3, (q, c)), int(fops.INF)
+    ).astype(np.int32)
+    args = (jnp.asarray(ws), jnp.asarray(dist), nbr, msk, 3)
+    out_r = fops.expand_hop(*args, band=6, use_kernel=False)
+    out_k = fops.expand_hop(*args, band=6, use_kernel=True)
+    for a, b, name in zip(out_r, out_k, ("ids", "dist", "fresh", "dropped")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
 
 
 def test_frontier_empty_and_full(rng):

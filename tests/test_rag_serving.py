@@ -242,3 +242,79 @@ def test_cache_disabled():
     assert cache.get(emb) is None
     cache.put(emb, None)  # no-op
     assert len(cache) == 0 and cache.misses == 1
+
+
+# ----------------------------------------------------- eviction policies ----
+def _entry(i):
+    from repro.serving import CachedRetrieval
+
+    return CachedRetrieval(
+        nodes=np.asarray([i], np.int32), mask=np.asarray([True]),
+        dist=np.asarray([0], np.int32), seeds=np.asarray([i], np.int32),
+    )
+
+
+def _emb(i):
+    return np.full(4, i, np.float32)
+
+
+def test_cache_lfu_eviction():
+    """lfu keeps warm regulars; the coldest (fewest hits) entry goes."""
+    cache = RetrievalCache(capacity=2, policy="lfu")
+    cache.put(_emb(0), _entry(0))
+    cache.put(_emb(1), _entry(1))
+    for _ in range(3):
+        assert cache.get(_emb(0)) is not None  # e0: 3 hits
+    assert cache.get(_emb(1)) is not None  # e1: 1 hit, more recent
+    cache.put(_emb(2), _entry(2))  # evicts e1 (fewest hits), not e0
+    assert cache.get(_emb(1)) is None
+    assert cache.get(_emb(0)) is not None
+    assert cache.evictions == 1
+    assert cache.hit_count(_emb(0)) == 4
+    # a 0-hit newcomer is protected at insertion: e2 (1 hit) goes, not e3
+    assert cache.get(_emb(2)) is not None
+    cache.put(_emb(3), _entry(3))
+    assert cache.get(_emb(2)) is None
+    assert cache.get(_emb(0)) is not None and cache.get(_emb(3)) is not None
+    assert cache.evictions == 2
+
+
+def test_cache_ttl_expiry_and_fifo_eviction():
+    clock = {"t": 0.0}
+    cache = RetrievalCache(capacity=2, policy="ttl", ttl=10.0,
+                           now_fn=lambda: clock["t"])
+    cache.put(_emb(0), _entry(0))
+    clock["t"] = 5.0
+    cache.put(_emb(1), _entry(1))
+    assert cache.get(_emb(0)) is not None  # 5s old, alive
+    clock["t"] = 11.0  # e0 expired (11 > 10), e1 alive (6s old)
+    assert cache.get(_emb(0)) is None
+    assert cache.expired == 1 and cache.misses == 1
+    assert cache.get(_emb(1)) is not None
+    # capacity pressure evicts oldest-inserted, not least-recent
+    cache.put(_emb(2), _entry(2))
+    cache.put(_emb(3), _entry(3))  # purge finds nothing fresh-expired -> FIFO
+    assert cache.get(_emb(1)) is None  # oldest inserted went first
+    assert cache.stats()["expired"] >= 1
+    assert cache.stats()["policy"] == "ttl"
+
+
+def test_cache_ttl_purge_before_policy_eviction():
+    clock = {"t": 0.0}
+    cache = RetrievalCache(capacity=2, policy="lru", ttl=1.0,
+                           now_fn=lambda: clock["t"])
+    cache.put(_emb(0), _entry(0))
+    cache.put(_emb(1), _entry(1))
+    clock["t"] = 2.0  # both expired
+    cache.put(_emb(2), _entry(2))  # expiry purge, no policy eviction needed
+    assert cache.expired == 2 and cache.evictions == 0
+    assert cache.stats()["size"] == 1
+
+
+def test_cache_policy_validation_and_engine_kwargs(stack):
+    with pytest.raises(ValueError, match="policy"):
+        RetrievalCache(policy="mru")
+    g, pipe, cfg, params = stack
+    eng = RAGServeEngine(pipe, params, cfg, slots=2, cache_len=CACHE_LEN,
+                         cache_policy="lfu", cache_ttl=60.0)
+    assert eng.cache.policy == "lfu" and eng.cache.ttl == 60.0

@@ -1,0 +1,240 @@
+"""Workset-compacted subgraph construction: dense-parity, overflow
+semantics, and workset invariants.
+
+The compact backend's contract: whenever no query overflows the capacity,
+its output — nodes, mask, dist, including tie order — is bitwise identical
+to the dense backend for every strategy; on overflow the truncation is
+deterministic (first-C of the ball ordered by (hop distance, node id)) and
+the per-query flag is raised.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph_retrieval as gr
+from repro.core import naive
+from repro.core.workset import build_workset, workset_adjacency
+from repro.graph import CSRGraph, csr_to_ell, generators
+
+STRAT_KW = {
+    "bfs": dict(max_hops=3, max_nodes=40),
+    "dense": dict(max_hops=2, max_nodes=24),
+    "steiner": dict(max_hops=4, max_nodes=64),
+    "ppr": dict(max_nodes=40, n_iter=6),
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g = generators.citation_graph(300, avg_deg=6, seed=7, with_text=False)
+    return g, csr_to_ell(g), g.to_adj_dict()
+
+
+def _seeds(n, q=6, s=4, seed=0):
+    return np.random.default_rng(seed).integers(0, n, size=(q, s)).astype(np.int32)
+
+
+def _assert_bitwise_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.nodes), np.asarray(b.nodes))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+    np.testing.assert_array_equal(np.asarray(a.dist), np.asarray(b.dist))
+
+
+# -------------------------------------------------------- dense parity ------
+@pytest.mark.parametrize("strategy", sorted(gr.STRATEGIES))
+def test_compact_matches_dense_generous_cap(graph, strategy):
+    """cap >= n: overflow is impossible, outputs must be bitwise equal."""
+    g, ell, _ = graph
+    seeds = jnp.asarray(_seeds(g.num_nodes))
+    dense = gr.STRATEGIES[strategy](ell.nbr, ell.nbr_mask, seeds,
+                                    **STRAT_KW[strategy])
+    comp = gr.COMPACT_STRATEGIES[strategy](
+        ell.nbr, ell.nbr_mask, seeds, workset_cap=512, **STRAT_KW[strategy]
+    )
+    assert not np.asarray(comp.overflow).any()
+    _assert_bitwise_equal(dense, comp)
+
+
+@pytest.mark.parametrize("strategy", sorted(gr.STRATEGIES))
+def test_compact_matches_dense_tight_nonoverflowing_cap(graph, strategy):
+    """cap < n but >= every ball: parity must still be exact."""
+    g, ell, _ = graph
+    seeds = jnp.asarray(_seeds(g.num_nodes, q=4, seed=3))
+    kw = dict(STRAT_KW[strategy])
+    if strategy in ("bfs", "steiner"):
+        kw["max_hops"] = 2  # keep the ball well under the cap
+    if strategy == "ppr":
+        kw["n_iter"] = 2
+    comp = gr.COMPACT_STRATEGIES[strategy](
+        ell.nbr, ell.nbr_mask, seeds, workset_cap=256, **kw
+    )
+    assert not np.asarray(comp.overflow).any(), "cap too tight for this test"
+    dense = gr.STRATEGIES[strategy](ell.nbr, ell.nbr_mask, seeds, **kw)
+    _assert_bitwise_equal(dense, comp)
+
+
+def test_retrieve_subgraph_mode_dispatch(graph):
+    g, ell, _ = graph
+    seeds = _seeds(g.num_nodes, q=3)
+    d = gr.retrieve_subgraph(ell, seeds, "bfs", mode="dense",
+                             max_hops=2, max_nodes=16)
+    c = gr.retrieve_subgraph(ell, seeds, "bfs", mode="compact",
+                             workset_cap=512, max_hops=2, max_nodes=16)
+    a = gr.retrieve_subgraph(ell, seeds, "bfs", mode="auto",
+                             max_hops=2, max_nodes=16)
+    assert d.overflow is None  # dense backend does not track overflow
+    assert c.overflow is not None
+    _assert_bitwise_equal(d, c)
+    _assert_bitwise_equal(d, a)  # auto on a small graph = dense
+    with pytest.raises(ValueError):
+        gr.retrieve_subgraph(ell, seeds, "bfs", mode="nope")
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_compact_parity_random_graphs(trial):
+    """Random (non-PA) graphs, all strategies, through the dispatcher."""
+    rng = np.random.default_rng(100 + trial)
+    n = int(rng.integers(60, 200))
+    src = rng.integers(0, n, size=n * 3)
+    dst = rng.integers(0, n, size=n * 3)
+    g = CSRGraph.from_edges(src, dst, n, symmetrize=True)
+    ell = csr_to_ell(g)
+    seeds = rng.integers(0, n, size=(3, 3)).astype(np.int32)
+    for strategy in sorted(gr.STRATEGIES):
+        kw = dict(STRAT_KW[strategy], max_nodes=min(32, n))
+        d = gr.retrieve_subgraph(ell, seeds, strategy, mode="dense", **kw)
+        c = gr.retrieve_subgraph(ell, seeds, strategy, mode="compact",
+                                 workset_cap=max(256, n), **kw)
+        assert not np.asarray(c.overflow).any()
+        _assert_bitwise_equal(d, c)
+
+
+# ------------------------------------------------------ workset invariants --
+def test_workset_is_exact_ball_without_overflow(graph):
+    g, ell, adj = graph
+    seeds = jnp.asarray(_seeds(g.num_nodes, q=4, seed=5))
+    ws = build_workset(ell.nbr, ell.nbr_mask, seeds, max_hops=3, cap=512)
+    assert not np.asarray(ws.overflow).any()
+    ids = np.asarray(ws.ids)
+    dist = np.asarray(ws.dist)
+    for qi in range(4):
+        ball = naive.bfs_distances(
+            adj, sorted(set(np.asarray(seeds)[qi].tolist())), 3
+        )
+        real = ids[qi][ids[qi] < g.num_nodes]
+        assert (np.diff(real) > 0).all()  # sorted, unique
+        assert set(real.tolist()) == set(ball)
+        for v, dv in zip(ids[qi], dist[qi]):
+            if v < g.num_nodes:
+                assert ball[int(v)] == int(dv)
+
+
+def test_workset_overflow_truncation_is_deterministic(graph):
+    """Truncated workset == first-cap of the ball by (dist, id), flag set."""
+    g, ell, adj = graph
+    seeds = jnp.asarray(_seeds(g.num_nodes, q=4, seed=9))
+    cap = 48
+    ws = build_workset(ell.nbr, ell.nbr_mask, seeds, max_hops=3, cap=cap)
+    ws2 = build_workset(ell.nbr, ell.nbr_mask, seeds, max_hops=3, cap=cap)
+    np.testing.assert_array_equal(np.asarray(ws.ids), np.asarray(ws2.ids))
+    np.testing.assert_array_equal(np.asarray(ws.dist), np.asarray(ws2.dist))
+    ids = np.asarray(ws.ids)
+    dist = np.asarray(ws.dist)
+    for qi in range(4):
+        ball = naive.bfs_distances(
+            adj, sorted(set(np.asarray(seeds)[qi].tolist())), 3
+        )
+        expect_overflow = len(ball) > cap
+        assert bool(np.asarray(ws.overflow)[qi]) == expect_overflow
+        want = sorted(ball.items(), key=lambda kv: (kv[1], kv[0]))[:cap]
+        got = sorted(
+            (int(v), int(dv)) for v, dv in zip(ids[qi], dist[qi])
+            if v < g.num_nodes
+        )
+        assert got == sorted(want)
+
+
+def test_overflowing_retrieval_is_deterministic_and_flagged(graph):
+    g, ell, _ = graph
+    seeds = _seeds(g.num_nodes, q=4, seed=2)
+    a = gr.retrieve_subgraph(ell, seeds, "bfs", mode="compact",
+                             workset_cap=48, max_hops=3, max_nodes=32)
+    b = gr.retrieve_subgraph(ell, seeds, "bfs", mode="compact",
+                             workset_cap=48, max_hops=3, max_nodes=32)
+    assert np.asarray(a.overflow).any()
+    _assert_bitwise_equal(a, b)
+
+
+def test_auto_mode_falls_back_to_dense_on_overflow(graph, monkeypatch):
+    """auto + overflow -> transparent dense re-run (flagless exact output)."""
+    g, ell, _ = graph
+    monkeypatch.setattr(gr, "AUTO_COMPACT_MIN_NODES", 1)
+    seeds = _seeds(g.num_nodes, q=4, seed=2)
+    sub = gr.retrieve_subgraph(ell, seeds, "bfs", mode="auto",
+                               workset_cap=48, max_hops=3, max_nodes=32)
+    dense = gr.retrieve_subgraph(ell, seeds, "bfs", mode="dense",
+                                 max_hops=3, max_nodes=32)
+    assert sub.overflow is None  # the dense re-run is what came back
+    _assert_bitwise_equal(sub, dense)
+
+
+def test_auto_mode_is_traceable_under_outer_jit(graph, monkeypatch):
+    """Inside jax.jit the overflow flags are tracers: the host-side
+    fallback check must be skipped, not crash with a ConcretizationError."""
+    import jax
+
+    g, ell, _ = graph
+    monkeypatch.setattr(gr, "AUTO_COMPACT_MIN_NODES", 1)
+    seeds = jnp.asarray(_seeds(g.num_nodes, q=3, seed=6))
+
+    @jax.jit
+    def traced(s):
+        sub = gr.retrieve_subgraph(ell, s, "bfs", mode="auto",
+                                   workset_cap=256, max_hops=1, max_nodes=16)
+        return sub.nodes, sub.overflow
+
+    nodes, ovf = traced(seeds)
+    eager = gr.retrieve_subgraph(ell, seeds, "bfs", mode="compact",
+                                 workset_cap=256, max_hops=1, max_nodes=16)
+    np.testing.assert_array_equal(np.asarray(nodes), np.asarray(eager.nodes))
+    np.testing.assert_array_equal(np.asarray(ovf), np.asarray(eager.overflow))
+
+
+def test_auto_mode_keeps_ppr_dense(graph, monkeypatch):
+    """ppr's n_iter-hop radius overflows practical caps: auto stays dense."""
+    g, ell, _ = graph
+    monkeypatch.setattr(gr, "AUTO_COMPACT_MIN_NODES", 1)
+    seeds = _seeds(g.num_nodes, q=3, seed=6)
+    sub = gr.retrieve_subgraph(ell, seeds, "ppr", mode="auto",
+                               workset_cap=48, max_nodes=16)
+    assert sub.overflow is None  # dense backend ran
+
+
+def test_workset_adjacency_matches_graph(graph):
+    g, ell, adj = graph
+    seeds = jnp.asarray(_seeds(g.num_nodes, q=3, seed=4))
+    ws = build_workset(ell.nbr, ell.nbr_mask, seeds, max_hops=2, cap=256)
+    wnbr, wmask = workset_adjacency(ell.nbr, ell.nbr_mask, ws.ids)
+    ids = np.asarray(ws.ids)
+    wn, wm = np.asarray(wnbr), np.asarray(wmask)
+    for qi in range(3):
+        members = {int(v): i for i, v in enumerate(ids[qi]) if v < g.num_nodes}
+        for v, i in members.items():
+            got = {int(ids[qi][p]) for p, ok in zip(wn[qi, i], wm[qi, i]) if ok}
+            expect = {w for w in adj[v] if w in members}
+            assert got == expect, (qi, v)
+
+
+def test_filter_preserves_overflow_flags(graph):
+    from repro.core.filters import dynamic_filter, similarity_scores
+
+    g, ell, _ = graph
+    seeds = _seeds(g.num_nodes, q=4, seed=2)
+    sub = gr.retrieve_subgraph(ell, seeds, "bfs", mode="compact",
+                               workset_cap=48, max_hops=3, max_nodes=32)
+    emb = jnp.asarray(g.node_feat)
+    scores = similarity_scores(emb, emb[seeds[:, 0]])
+    out = dynamic_filter(sub, scores, jnp.asarray(seeds), budget=8)
+    np.testing.assert_array_equal(
+        np.asarray(out.overflow), np.asarray(sub.overflow)
+    )
