@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * abstract_generation — paper Table 2 (ROUGE-1/2/L per context)
   * kernels             — microbench of the Pallas-kernel reference paths
   * serving             — fused RAG serving (also writes BENCH_rag_serving.json)
+  * async_serving       — sync vs prefetched admission at several retrieval
+                          costs (also writes BENCH_async_serving.json)
   * sharding            — sharded index + tiled IVF scan (also writes
                           BENCH_index_sharding.json)
   * scaling             — dense vs workset-compacted subgraph construction
@@ -23,15 +25,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
-        "sharding", "scaling",
+        "async_serving", "sharding", "scaling",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
     args = ap.parse_args()
 
     from benchmarks import (
-        abstract_generation, index_sharding, kernels, modality_completion,
-        rag_serving, retrieval_scaling,
+        abstract_generation, async_serving, index_sharding, kernels,
+        modality_completion, rag_serving, retrieval_scaling,
     )
 
     print("name,us_per_call,derived")
@@ -60,6 +62,15 @@ def main() -> None:
         print(f"serving/fused_vs_seq,{r['fused_s'] * 1e6:.0f},"
               f"ratio={r['throughput_ratio']:.1f}x;"
               f"replay={r['replay_speedup']:.2f}x")
+    if args.only in (None, "async_serving"):
+        kw = dict(n_nodes=1000, n_requests=12, max_new=8) if args.fast else {}
+        rep = async_serving.run(**kw)
+        async_serving.write_json(rep)
+        for r in rep["results"]:
+            print(f"async_serving/cost={r['cost_ratio']:.1f}x,"
+                  f"{r['prefetch_s'] * 1e6:.0f},"
+                  f"speedup={r['speedup']:.2f}x;"
+                  f"hidden={r['hidden_frac']:.2f}")
     if args.only in (None, "sharding"):
         sizes = (20_000, 50_000) if args.fast else (50_000, 200_000)
         rep = index_sharding.run(corpus_sizes=sizes)

@@ -100,6 +100,17 @@ class RGLPipeline:
 
         Returns ``(sub, seeds, n_valid)`` where ``sub``/``seeds`` have leading
         dim ``batch_size`` and only the first ``n_valid`` rows are meaningful.
+
+        **Non-blocking contract:** the returned arrays are device arrays whose
+        computation may still be in flight (JAX async dispatch) — this method
+        never forces a host sync itself.  Callers that need host data must
+        ``np.asarray`` the results, which blocks until retrieval finishes; the
+        serving prefetch path (:mod:`repro.serving.prefetch`) relies on this
+        laziness to overlap wave *i+1*'s retrieval with wave *i*'s decode.
+        One caveat: ``retrieval_mode="auto"``'s host-side overflow check in
+        :func:`repro.core.graph_retrieval.retrieve_subgraph` forces an early
+        sync on the compact backend — prefer ``dense`` or ``compact``
+        explicitly when overlap matters.
         """
         q = np.asarray(query_embs, np.float32)
         if q.ndim == 1:

@@ -79,7 +79,9 @@ def _serve_rag(cfg, args) -> None:
     cache_len = max(cfg.sliding_window or 0, 96 + args.max_new + 1)
     eng = RAGServeEngine(pipe, params, cfg, slots=args.slots,
                          cache_len=cache_len, cache_policy=args.cache_policy,
-                         cache_ttl=args.cache_ttl)
+                         cache_ttl=args.cache_ttl,
+                         prefetch=args.prefetch,
+                         prefetch_depth=args.prefetch_depth)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -98,6 +100,11 @@ def _serve_rag(cfg, args) -> None:
           f"in {dt:.1f}s ({toks / dt:.1f} tok/s); "
           f"{s['retrieval_batches']} retrieval batches, "
           f"cache {s['hits']}/{s['hits'] + s['misses']} hits")
+    if s["prefetch"]:
+        print(f"  prefetch: {s['prefetch_waves']} waves, "
+              f"{s['overlap_seconds'] * 1e3:.1f}ms overlapped "
+              f"({s['overlap_steps']} decode steps), "
+              f"hidden_frac={s['hidden_frac']:.2f}")
 
 
 def main():
@@ -127,6 +134,14 @@ def main():
                     help="retrieval-cache eviction policy for --rag")
     ap.add_argument("--cache-ttl", type=float, default=None,
                     help="retrieval-cache entry expiry in seconds")
+    ap.add_argument("--prefetch", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="double-buffered async admission: overlap the next "
+                         "wave's retrieval with the current decode steps "
+                         "(--no-prefetch forces sync; default honors "
+                         "RGL_PREFETCH)")
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="max launched-but-uncollected admission waves")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch).reduced_cfg

@@ -1,9 +1,13 @@
 from repro.serving.engine import ServeEngine, Request
 from repro.serving.cache import RetrievalCache, CachedRetrieval
+from repro.serving.prefetch import AdmissionPrefetcher, PrefetchWave
 from repro.serving.rag_engine import RAGServeEngine, RAGRequest
+from repro.serving.simulate import DelayedRetrieval, LazyHostArray
 
 __all__ = [
     "ServeEngine", "Request",
     "RetrievalCache", "CachedRetrieval",
+    "AdmissionPrefetcher", "PrefetchWave",
     "RAGServeEngine", "RAGRequest",
+    "DelayedRetrieval", "LazyHostArray",
 ]

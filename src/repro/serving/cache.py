@@ -19,6 +19,13 @@ Independently of the policy, an optional ``ttl`` (seconds) expires entries
 ``ttl`` after insertion: an expired entry is dropped at lookup (counted as
 a miss + ``expired``), and ``put`` purges expired entries before falling
 back to policy eviction.
+
+For async admission prefetch the cache also tracks an **in-flight miss
+set**: keys whose retrieval has been dispatched but whose results have not
+been collected yet.  A later admission launch consults it so a
+retrieved-but-not-yet-collected query is never re-dispatched — the request
+defers to the in-flight wave instead (see
+:class:`repro.serving.prefetch.AdmissionPrefetcher`).
 """
 from __future__ import annotations
 
@@ -77,6 +84,7 @@ class RetrievalCache:
         self.ttl = ttl
         self._now = now_fn
         self._data: OrderedDict[bytes, _Slot] = OrderedDict()  # recency order
+        self._inflight: set[bytes] = set()  # dispatched, not yet collected
         self.hits = 0
         self.misses = 0
         self.evictions = 0  # capacity evictions by the active policy
@@ -88,6 +96,22 @@ class RetrievalCache:
     def key(self, query_emb) -> bytes:
         q = np.asarray(query_emb, np.float32).ravel()
         return np.round(q / self.quant_eps).astype(np.int32).tobytes()
+
+    # -- in-flight miss set ---------------------------------------------------
+    def mark_inflight(self, key: bytes) -> None:
+        """Record that ``key``'s retrieval has been dispatched but not yet
+        collected, so later admission launches defer instead of re-dispatch."""
+        self._inflight.add(key)
+
+    def is_inflight(self, key: bytes) -> bool:
+        return key in self._inflight
+
+    def release_inflight(self, key: bytes) -> None:
+        self._inflight.discard(key)
+
+    @property
+    def inflight_count(self) -> int:
+        return len(self._inflight)
 
     # -- expiry ---------------------------------------------------------------
     def _is_expired(self, slot: _Slot, now: float) -> bool:
@@ -156,5 +180,6 @@ class RetrievalCache:
             "expired": self.expired,
             "policy": self.policy,
             "size": len(self._data),
+            "inflight": len(self._inflight),
             "hit_rate": self.hits / total if total else 0.0,
         }

@@ -39,6 +39,9 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # monotonic admission ticket assigned by the submitting front-end; a
+    # stable identity that, unlike id(self), is never reused after GC
+    ticket: int = -1
 
 
 def _bucket_len(n: int, cache_len: int, floor: int = 8) -> int:
@@ -112,6 +115,13 @@ class ServeEngine:
         self.cache = tm.init_cache(cfg, slots, cache_len)
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.live = np.zeros(slots, bool)
+
+    @property
+    def free_slots(self) -> int:
+        """Decode slots that remain free once the admission queue drains —
+        the backpressure signal for async retrieval prefetch (collect a
+        prefetched wave only when it can actually be admitted)."""
+        return max(0, int(self.slots - self.live.sum()) - len(self.queue))
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -188,9 +198,15 @@ class ServeEngine:
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list:
+        """Step until every request drains.  Raises if ``max_steps`` elapse
+        with work still queued or live, instead of silently returning a
+        partial result set."""
         done = []
         for _ in range(max_steps):
             done.extend(self.step())
             if not self.queue and not self.live.any():
-                break
-        return done
+                return done
+        raise RuntimeError(
+            f"run_to_completion: work still pending after {max_steps} steps "
+            f"({len(self.queue)} queued, {int(self.live.sum())} live slots)"
+        )

@@ -1,0 +1,280 @@
+"""Double-buffered async admission retrieval for the fused RAG engine.
+
+The sync serving path retrieves at wave boundaries: every admission wave
+dispatches one jitted ``retrieve_many`` and immediately forces the result to
+host (``np.asarray``), so the decode arena idles for the full retrieval
+latency of every wave.  :class:`AdmissionPrefetcher` splits that into two
+phases so wave *i+1*'s retrieval overlaps wave *i*'s decode steps:
+
+* **launch** — cache lookup + intra-wave dedupe + ONE jitted
+  ``RGLPipeline.retrieve_many`` dispatch.  Results are kept as *device
+  arrays* (JAX async dispatch: the call returns before the computation
+  finishes), so retrieval runs concurrently with whatever the engine does
+  next — i.e. decode steps for the previous wave.
+* **collect** — block on the device arrays (the only host sync), insert the
+  finished entries into the :class:`~repro.serving.cache.RetrievalCache`,
+  and hand ``(request, entry)`` pairs back for tokenization + admission.
+  The engine runs collect only once decode slots free up.
+
+Between launch and collect every miss key is marked *in-flight* on the
+cache (``mark_inflight``), so a later launch never re-dispatches a query
+that is retrieved-but-not-yet-collected: the request **defers** to the
+owning wave and resolves — including its cache-hit accounting — at its own
+wave's collect.  This keeps hit/miss totals identical to the sync schedule.
+
+``depth`` bounds how many launched-but-uncollected waves may exist (the
+backpressure window).  The serving default is 1 — classic double buffering:
+one wave decoding, one wave retrieving.  ``depth >= 2`` pipelines multiple
+retrieval waves and is where the in-flight set becomes load-bearing.
+
+**Parity scope.**  At the default ``depth=1`` every launch happens after all
+earlier collects, so cache state — contents, recency, per-entry hits — is
+step-for-step identical to sync and parity is unconditional.  At
+``depth >= 2`` wave *i+1*'s lookups intentionally run before wave *i*'s
+puts (that is the pipelining); outputs stay bitwise identical, and hit/miss
+totals still match except under capacity pressure, where the reordered
+recency updates can pick different eviction victims than the sync schedule
+would.  Serializing the lookups would restore that last corner but forfeit
+the overlap, so the divergence is accepted and documented.
+
+Telemetry (merged into ``RAGServeEngine.stats()``):
+
+* ``waves`` / ``batches`` / ``queries`` — async-collected waves that
+  dispatched a retrieval (miss-free waves are excluded — they have nothing
+  in flight), retrieval dispatches, retrieved (deduped) queries.
+* ``launch_seconds`` / ``block_seconds`` — host time in dispatch and in the
+  collect-phase force; their sum is the *observable* retrieval cost.
+* ``overlap_seconds`` — per-wave wall time between launch returning and
+  collect starting: the window retrieval had to run behind decode.  This is
+  an *upper bound* on hidden retrieval compute — if retrieval finished
+  early, the tail of the window hid nothing.
+* ``overlap_steps`` — engine steps executed between a wave's launch and its
+  collect (the overlap-oracle signal).
+* ``hidden_frac`` — ``overlap / (overlap + block)``: the fraction of each
+  wave's in-flight window not paid as blocking time.  Near 1.0 means
+  retrieval was never the bottleneck (either genuinely hidden or simply
+  cheap); judge the magnitude of the win from ``collect_block_seconds``
+  against the sync schedule's ``retrieval_seconds``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serving.cache import CachedRetrieval, RetrievalCache
+
+
+@dataclasses.dataclass
+class PrefetchWave:
+    """One launched admission wave: requests + the uncollected device arrays."""
+
+    reqs: list  # RAGRequest, arrival order
+    entry_for: list  # per request: CachedRetrieval | None until resolved
+    miss_groups: dict  # key -> [request indices], intra-wave dedupe
+    deferred: list  # (request idx, key, owner wave's entries_by_key dict)
+    sub: object = None  # Subgraph of device arrays (lazy) when misses exist
+    seeds: object = None
+    launched_at: float = 0.0  # clock at dispatch return
+    launch_step: int = 0  # engine step counter at launch
+    entries_by_key: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def has_misses(self) -> bool:
+        return bool(self.miss_groups)
+
+
+class AdmissionPrefetcher:
+    """Launch/collect state machine over at most ``depth`` in-flight waves.
+
+    The same launch/collect code drives both admission schedules: sync mode
+    collects immediately after launch (blocking at the wave boundary, zero
+    overlap by definition), prefetch mode leaves the wave in flight until
+    the engine has free slots.
+    """
+
+    def __init__(
+        self,
+        pipeline,
+        cache: RetrievalCache,
+        *,
+        wave_size: int,
+        depth: int = 1,
+        now_fn: Callable[[], float] = time.perf_counter,
+    ):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.pipeline = pipeline
+        self.cache = cache
+        self.wave_size = wave_size
+        self.depth = depth
+        self._now = now_fn
+        self._waves: deque[PrefetchWave] = deque()
+        # telemetry
+        self.waves = 0  # async-collected waves (prefetch schedule only)
+        self.batches = 0  # retrieval dispatches (both schedules)
+        self.queries = 0  # deduped queries retrieved
+        self.launch_seconds = 0.0
+        self.block_seconds = 0.0
+        self.overlap_seconds = 0.0
+        self.overlap_steps = 0
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._waves)
+
+    def can_launch(self) -> bool:
+        return len(self._waves) < self.depth
+
+    def launched_before(self, step: int) -> bool:
+        """Whether the oldest in-flight wave was launched before ``step`` —
+        collecting a wave in the same step it launched forfeits its overlap
+        window, so the engine only does that when the arena is idle."""
+        return bool(self._waves) and self._waves[0].launch_step < step
+
+    def _owner_entries(self, key: bytes) -> Optional[dict]:
+        """The in-flight owner wave's (still-empty) entries_by_key dict —
+        filled in place at that wave's collect, so holding the dict (not the
+        wave) is enough for deferred fallback and retains nothing else."""
+        for w in self._waves:
+            if key in w.miss_groups:
+                return w.entries_by_key
+        return None
+
+    # -- launch ---------------------------------------------------------------
+    def launch(self, reqs: list, *, step: int = 0) -> PrefetchWave:
+        """Dispatch one admission wave without forcing any device array.
+
+        Cache lookups and hit/miss accounting happen here, mirroring the
+        sync schedule request-for-request: hits attach immediately, misses
+        dedupe into one ``retrieve_many`` row per quantized key (every
+        duplicate still counts its own miss, as in sync admission), and
+        keys already in flight defer to the owning wave with no counter
+        touched until that wave collects.
+        """
+        cache = self.cache
+        t0 = self._now()
+        wave = PrefetchWave(
+            reqs=reqs, entry_for=[None] * len(reqs), miss_groups={},
+            deferred=[], launch_step=step,
+        )
+        for j, r in enumerate(reqs):
+            k = cache.key(r.query_emb)
+            if k in wave.miss_groups:  # intra-wave dup: miss, one dispatch row
+                cache.get(r.query_emb)  # counts the duplicate's miss
+                wave.miss_groups[k].append(j)
+                continue
+            if cache.is_inflight(k):  # owned by an earlier uncollected wave
+                owner_entries = self._owner_entries(k)
+                if owner_entries is not None:
+                    wave.deferred.append((j, k, owner_entries))
+                    continue
+                # in-flight marker with no owning wave here: a stale key
+                # from a shared cache (another engine's wave, or a dead
+                # engine that never collected) — fall through and treat as
+                # an ordinary miss so the query is re-dispatched instead of
+                # deferring to a result that will never arrive
+            e = cache.get(r.query_emb)
+            if e is not None:
+                wave.entry_for[j] = e
+                r.cache_hit = True
+            else:
+                wave.miss_groups[k] = [j]
+
+        if wave.miss_groups:
+            qe = np.stack(
+                [reqs[idxs[0]].query_emb for idxs in wave.miss_groups.values()]
+            ).astype(np.float32)
+            # async dispatch: retrieve_many returns device arrays without a
+            # host sync, so the scan/BFS/filter pipeline runs concurrently
+            # with the decode steps the engine issues after this returns
+            wave.sub, wave.seeds, n_valid = self.pipeline.retrieve_many(
+                qe, batch_size=self.wave_size
+            )
+            # mark only after a successful dispatch: a raise above must not
+            # leave keys poisoned in the in-flight set forever
+            for k in wave.miss_groups:
+                cache.mark_inflight(k)
+            self.batches += 1
+            self.queries += n_valid
+        wave.launched_at = self._now()
+        self.launch_seconds += wave.launched_at - t0
+        self._waves.append(wave)
+        return wave
+
+    # -- collect --------------------------------------------------------------
+    def collect(self, *, step: int = 0, sync: bool = False) -> list:
+        """Block on the oldest wave and return ``(request, entry)`` pairs in
+        arrival order.  ``sync=True`` marks a launch-then-collect-immediately
+        schedule: no overlap is accrued (there was no window to hide in)."""
+        wave = self._waves.popleft()
+        cache = self.cache
+        t0 = self._now()
+        if not sync and wave.has_misses:
+            # overlap accrues only for waves that actually dispatched a
+            # retrieval: a miss-free (all-hit / all-deferred) wave has
+            # nothing in flight, so its launch-to-collect window hides
+            # nothing and would only inflate the telemetry
+            self.waves += 1
+            self.overlap_seconds += max(0.0, t0 - wave.launched_at)
+            self.overlap_steps += max(0, step - wave.launch_step)
+        try:
+            if wave.has_misses:
+                nodes = np.asarray(wave.sub.nodes)  # blocks until done
+                mask = np.asarray(wave.sub.mask)
+                dist = np.asarray(wave.sub.dist)
+                seeds_np = np.asarray(wave.seeds)
+                self.block_seconds += self._now() - t0
+
+            # deferred first (they are cache *hits* on earlier waves' keys —
+            # resolve before this wave's own puts, matching sync get-then-put
+            # order), then insert this wave's fresh entries
+            for j, k, owner_entries in wave.deferred:
+                r = wave.reqs[j]
+                e = cache.get(r.query_emb)  # counts the hit, bumps recency
+                if e is not None:
+                    r.cache_hit = True
+                elif owner_entries is not None:
+                    # the owner's entry was evicted/expired between its
+                    # collect and ours: the get above counted the miss (as
+                    # sync would), and instead of re-dispatching we serve the
+                    # owner's result — retrieval is deterministic, so the
+                    # bits match what sync's re-retrieval would produce — and
+                    # re-insert it as that re-retrieval's put would.  Only
+                    # the dispatch count diverges from sync here (one fewer,
+                    # by design).
+                    e = owner_entries.get(k)
+                    if e is not None:
+                        cache.put(r.query_emb, e)
+                wave.entry_for[j] = e
+            for row, (k, idxs) in enumerate(wave.miss_groups.items()):
+                entry = CachedRetrieval(
+                    nodes=nodes[row].copy(), mask=mask[row].copy(),
+                    dist=dist[row].copy(), seeds=seeds_np[row].copy(),
+                )
+                cache.put(wave.reqs[idxs[0]].query_emb, entry)
+                wave.entries_by_key[k] = entry
+                for j in idxs:
+                    wave.entry_for[j] = entry
+        finally:
+            # even if the force raises (async retrieval error surfaces
+            # here), the keys must leave the in-flight set so later
+            # launches re-dispatch instead of deferring to a dead wave
+            for k in wave.miss_groups:
+                cache.release_inflight(k)
+            wave.sub = wave.seeds = None  # drop device arrays promptly
+        return list(zip(wave.reqs, wave.entry_for))
+
+    def stats(self) -> dict:
+        denom = self.overlap_seconds + self.block_seconds
+        return {
+            "prefetch_waves": self.waves,
+            "overlap_seconds": self.overlap_seconds,
+            "overlap_steps": self.overlap_steps,
+            "launch_seconds": self.launch_seconds,
+            "collect_block_seconds": self.block_seconds,
+            "hidden_frac": self.overlap_seconds / denom if denom > 0 else 0.0,
+        }

@@ -6,19 +6,26 @@ decode server: a raw ``(query_emb, query_text)`` request goes through
     index -> seed retrieval -> subgraph construction -> dynamic filter
           -> tokenization -> batched prefill -> continuous-batching decode
 
-inside one engine.  Two amortization mechanisms drive throughput:
+inside one engine.  Three amortization mechanisms drive throughput:
 
-* **Batched admission retrieval** — every engine step gathers all pending
-  admissions and runs ONE jitted ``RGLPipeline.retrieve_many`` call over the
-  whole admission batch (padded to a fixed shape), instead of per-request
-  retrieval dispatches.  This is the paper's core batching speedup applied at
-  serve time.
+* **Batched admission retrieval** — every admission wave runs ONE jitted
+  ``RGLPipeline.retrieve_many`` call over the whole wave (padded to a fixed
+  shape), instead of per-request retrieval dispatches.  This is the paper's
+  core batching speedup applied at serve time.
 * **Retrieval caching** — a policy-driven (lru / lfu / ttl, optional expiry)
   :class:`~repro.serving.cache.RetrievalCache` keyed on quantized query
   embeddings lets repeated / near-duplicate queries skip index + BFS + filter
   entirely.  Hit/miss counters are exposed as ``engine.cache_hits`` /
   ``engine.cache_misses``; pick the policy via ``cache_policy`` /
   ``cache_ttl`` engine kwargs.
+* **Async admission prefetch** (``prefetch=True``, or ``RGL_PREFETCH=1``) —
+  wave *i+1*'s retrieval is *launched* (dispatched, results left as device
+  arrays) while wave *i*'s decode steps run, and *collected* (forced,
+  tokenized, admitted) only once decode slots free up: double-buffered
+  admission via :class:`~repro.serving.prefetch.AdmissionPrefetcher`.  Sync
+  mode runs the identical launch/collect code back-to-back, so the two
+  schedules produce bitwise-identical outputs (see
+  ``tests/test_async_serving.py``).
 
 Generation itself rides the slot-based :class:`~repro.serving.engine.ServeEngine`
 (one jitted decode step for all slots, masked batched prefill admission).
@@ -26,7 +33,7 @@ Generation itself rides the slot-based :class:`~repro.serving.engine.ServeEngine
 from __future__ import annotations
 
 import dataclasses
-import time
+import os
 from collections import deque
 from typing import Optional
 
@@ -34,8 +41,17 @@ import numpy as np
 
 from repro.core.pipeline import RGLPipeline
 from repro.models.transformer.config import TransformerConfig
-from repro.serving.cache import CachedRetrieval, RetrievalCache
+from repro.serving.cache import RetrievalCache
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.prefetch import AdmissionPrefetcher
+
+
+def _prefetch_default() -> bool:
+    """``RGL_PREFETCH`` env toggle, so the whole test/CI matrix can flip the
+    admission schedule without touching call sites.  Only explicit truthy
+    values enable it — anything else (including "no"/"disabled") stays sync."""
+    return os.environ.get("RGL_PREFETCH", "").lower() in ("1", "true", "on",
+                                                          "yes")
 
 
 @dataclasses.dataclass
@@ -63,6 +79,7 @@ class RAGServeEngine:
         finished = eng.run_to_completion()   # .out_tokens per request
 
     ``pipe`` must carry a tokenizer and node_text (stages 4's inputs).
+    ``prefetch=None`` reads the ``RGL_PREFETCH`` env var (default off).
     """
 
     def __init__(
@@ -79,6 +96,8 @@ class RAGServeEngine:
         quant_eps: float = 1e-3,
         cache_policy: str = "lru",
         cache_ttl: Optional[float] = None,
+        prefetch: Optional[bool] = None,
+        prefetch_depth: int = 1,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
@@ -95,12 +114,15 @@ class RAGServeEngine:
         self.cache = retrieval_cache if retrieval_cache is not None else \
             RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps,
                            policy=cache_policy, ttl=cache_ttl)
+        self.prefetch = _prefetch_default() if prefetch is None else \
+            bool(prefetch)
+        self.prefetcher = AdmissionPrefetcher(
+            pipeline, self.cache, wave_size=slots, depth=prefetch_depth,
+        )
         self.pending: deque = deque()
-        self._inflight: dict = {}  # inner uid -> RAGRequest
-        # amortization telemetry
-        self.retrieval_batches = 0
-        self.retrieved_queries = 0
-        self.retrieval_seconds = 0.0
+        self._inflight: dict = {}  # admission ticket -> RAGRequest
+        self._next_ticket = 0  # monotonic; never reused (unlike id())
+        self._step_no = 0
 
     # -- cache counters -------------------------------------------------------
     @property
@@ -111,93 +133,121 @@ class RAGServeEngine:
     def cache_misses(self) -> int:
         return self.cache.misses
 
+    # -- amortization telemetry (delegated to the prefetcher, which runs the
+    # launch/collect phases for both admission schedules) ----------------------
+    @property
+    def retrieval_batches(self) -> int:
+        return self.prefetcher.batches
+
+    @property
+    def retrieved_queries(self) -> int:
+        return self.prefetcher.queries
+
+    @property
+    def retrieval_seconds(self) -> float:
+        p = self.prefetcher
+        return p.launch_seconds + p.block_seconds
+
     # -- admission ------------------------------------------------------------
     def submit(self, req: RAGRequest) -> None:
         self.pending.append(req)
 
-    def _admit_retrieval(self) -> None:
-        """Move up to one admission batch of pending requests through
-        retrieval (one jitted batched call for all cache misses) and hand the
-        tokenized prompts to the decode engine."""
+    def _take_wave(self) -> list:
         take = min(len(self.pending), self.slots)
-        if take == 0:
-            return
-        reqs = [self.pending.popleft() for _ in range(take)]
+        return [self.pending.popleft() for _ in range(take)]
 
-        # cache lookup; dedupe misses within the batch by quantized key
-        entry_for: list = [None] * take
-        miss_reqs: dict = {}  # key -> (first request index, emb)
-        for j, r in enumerate(reqs):
-            e = self.cache.get(r.query_emb)
-            if e is not None:
-                entry_for[j] = e
-                r.cache_hit = True
-            else:
-                miss_reqs.setdefault(self.cache.key(r.query_emb),
-                                     []).append(j)
-
-        if miss_reqs:
-            order = list(miss_reqs.items())
-            qe = np.stack([reqs[idxs[0]].query_emb for _, idxs in order]) \
-                .astype(np.float32)
-            t0 = time.perf_counter()
-            sub, seeds, n_valid = self.pipeline.retrieve_many(
-                qe, batch_size=self.slots
-            )
-            nodes = np.asarray(sub.nodes)  # blocks; also ends the timed span
-            mask = np.asarray(sub.mask)
-            dist = np.asarray(sub.dist)
-            seeds_np = np.asarray(seeds)
-            self.retrieval_seconds += time.perf_counter() - t0
-            self.retrieval_batches += 1
-            self.retrieved_queries += n_valid
-            for row, (_, idxs) in enumerate(order):
-                entry = CachedRetrieval(
-                    nodes=nodes[row].copy(), mask=mask[row].copy(),
-                    dist=dist[row].copy(), seeds=seeds_np[row].copy(),
-                )
-                self.cache.put(reqs[idxs[0]].query_emb, entry)
-                for j in idxs:
-                    entry_for[j] = entry
-
-        # tokenize and admit
+    def _tokenize_and_admit(self, resolved: list) -> None:
+        """Stage 4+5 handoff: linearize each (request, entry) pair and hand
+        the prompt to the decode engine under a fresh admission ticket."""
         tok = self.pipeline.tokenizer
         node_text = self.pipeline.node_text
-        for j, r in enumerate(reqs):
-            e = entry_for[j]
+        for r, e in resolved:
             texts = [node_text[int(v)] for v, m in zip(e.nodes, e.mask) if m]
             ids, mask = tok.linearize(r.query_text, texts)
             r.prompt_ids = ids[mask]
             r.retrieved_nodes = e.nodes[e.mask].copy()
             inner = Request(
                 uid=r.uid, prompt_ids=r.prompt_ids,
-                max_new_tokens=r.max_new_tokens,
+                max_new_tokens=r.max_new_tokens, ticket=self._next_ticket,
             )
-            self._inflight[id(inner)] = r
+            self._inflight[inner.ticket] = r
+            self._next_ticket += 1
             self.engine.submit(inner)
+
+    def _admit_sync(self) -> None:
+        """Sync schedule: launch one wave and collect it immediately (the
+        collect's ``np.asarray`` blocks for the full retrieval latency)."""
+        reqs = self._take_wave()
+        if not reqs:
+            return
+        self.prefetcher.launch(reqs, step=self._step_no)
+        self._tokenize_and_admit(
+            self.prefetcher.collect(step=self._step_no, sync=True)
+        )
+
+    def _launch_pending(self) -> None:
+        while self.pending and self.prefetcher.can_launch():
+            self.prefetcher.launch(self._take_wave(), step=self._step_no)
+
+    def _admit_prefetch(self) -> None:
+        """Prefetch schedule: collect waves as decode slots free up
+        (backpressure: never tokenize/admit into a still-full arena) and
+        launch the next wave(s) so their retrieval overlaps this step's
+        decode.  The launch is sandwiched between a wave's collect (which
+        inserts its cache entries — so the next lookup sees them) and its
+        tokenize/admit, putting the admission overhead *inside* the next
+        wave's overlap window too."""
+        while (self.prefetcher.launched_before(self._step_no)
+                and self.engine.free_slots > 0):
+            # never collect a wave in the step it launched (that would
+            # forfeit its whole overlap window, e.g. under trickle load
+            # where wave size < free slots) — except via the idle-arena
+            # fast path below, where there is nothing to overlap with
+            resolved = self.prefetcher.collect(step=self._step_no)
+            self._launch_pending()
+            self._tokenize_and_admit(resolved)
+        self._launch_pending()
+        if (not self.engine.live.any() and not self.engine.queue
+                and self.prefetcher.in_flight):
+            # idle arena: nothing to overlap with, don't stall a step
+            self._tokenize_and_admit(
+                self.prefetcher.collect(step=self._step_no)
+            )
 
     # -- stepping -------------------------------------------------------------
     def step(self) -> list:
-        """One engine step: batched retrieval admission + one decode step.
+        """One engine step: admission (sync or prefetched) + one decode step.
         Returns the RAG requests that finished this step."""
-        self._admit_retrieval()
+        if self.prefetch:
+            self._admit_prefetch()
+        else:
+            self._admit_sync()
         finished_inner = self.engine.step()
+        self._step_no += 1
         out = []
         for inner in finished_inner:
-            r = self._inflight.pop(id(inner))
+            r = self._inflight.pop(inner.ticket)
             r.out_tokens = inner.out_tokens
             r.done = True
             out.append(r)
         return out
 
+    def _drained(self) -> bool:
+        return (not self.pending and not self.prefetcher.in_flight
+                and not self.engine.queue and not self.engine.live.any())
+
     def run_to_completion(self, max_steps: int = 10_000) -> list:
         done = []
         for _ in range(max_steps):
             done.extend(self.step())
-            if (not self.pending and not self.engine.queue
-                    and not self.engine.live.any()):
-                break
-        return done
+            if self._drained():
+                return done
+        raise RuntimeError(
+            f"run_to_completion: work still pending after {max_steps} steps "
+            f"({len(self.pending)} pending, {self.prefetcher.in_flight} "
+            f"in-flight waves, {len(self.engine.queue)} queued, "
+            f"{int(self.engine.live.sum())} live slots)"
+        )
 
     def stats(self) -> dict:
         s = self.cache.stats()
@@ -205,5 +255,7 @@ class RAGServeEngine:
             retrieval_batches=self.retrieval_batches,
             retrieved_queries=self.retrieved_queries,
             retrieval_seconds=self.retrieval_seconds,
+            prefetch=self.prefetch,
+            **self.prefetcher.stats(),
         )
         return s

@@ -1,0 +1,104 @@
+"""Retrieval-latency simulation for benchmarking the async admission path.
+
+JAX async dispatch makes a real ``retrieve_many`` overlap decode naturally,
+but its latency on a tiny CPU test graph is microseconds — too small to
+measure scheduling behavior against.  :class:`DelayedRetrieval` wraps a real
+pipeline and emulates a configurable retrieval cost with the *same* blocking
+semantics as async dispatch:
+
+* the ``retrieve_many`` call returns immediately (dispatch is cheap),
+* forcing a result to host (``np.asarray`` -> ``__array__``) blocks until
+  ``cost_s`` seconds after dispatch — exactly like blocking on a device
+  array whose computation is still running.
+
+A sync admission schedule therefore pays the full ``cost_s`` at every wave
+boundary, while the prefetch schedule hides whatever fraction of it decode
+steps cover — which is the comparison ``benchmarks/async_serving.py`` and
+the overlap-oracle tests need to make deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class LazyHostArray:
+    """A host array that pretends to still be computing until ``ready_at``.
+
+    ``np.asarray`` (via ``__array__``) blocks until the deadline passes —
+    the same contract as forcing an in-flight JAX device array.  ``events``
+    (if given) receives ``(tag, payload)`` tuples at force time, so tests
+    can prove *when* the collect-phase block happened relative to decode.
+    """
+
+    def __init__(self, data: np.ndarray, ready_at: float,
+                 sleep: Callable[[float], None] = time.sleep,
+                 now: Callable[[], float] = time.perf_counter,
+                 events: Optional[list] = None, tag: str = "force"):
+        self._data = np.asarray(data)
+        self._ready_at = ready_at
+        self._sleep = sleep
+        self._now = now
+        self._events = events
+        self._tag = tag
+
+    def __array__(self, dtype=None, copy=None):
+        remaining = self._ready_at - self._now()
+        if remaining > 0:
+            self._sleep(remaining)
+        if self._events is not None:
+            self._events.append((self._tag, self._now()))
+            self._events = None  # log the first force only
+        a = self._data
+        return a.astype(dtype) if dtype is not None else a
+
+
+@dataclasses.dataclass
+class _LazySubgraph:
+    """Duck-typed stand-in for ``Subgraph`` whose fields force lazily."""
+
+    nodes: LazyHostArray
+    mask: LazyHostArray
+    dist: LazyHostArray
+
+
+class DelayedRetrieval:
+    """Pipeline proxy: real retrieval results, simulated device latency.
+
+    Forwards everything to ``inner`` but rewrites ``retrieve_many`` so the
+    returned arrays only become forceable ``cost_s`` seconds after dispatch.
+    ``events`` receives ``("launch", t)`` per dispatch and ``("force", t)``
+    on the first field forced per wave.
+    """
+
+    def __init__(self, inner, cost_s: float,
+                 events: Optional[list] = None):
+        self.inner = inner
+        self.cost_s = cost_s
+        self.events = events
+        self.dispatches = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def retrieve_many(self, query_embs, *, batch_size=None, encoder=None):
+        sub, seeds, n_valid = self.inner.retrieve_many(
+            query_embs, batch_size=batch_size, encoder=encoder
+        )
+        self.dispatches += 1
+        now = time.perf_counter()
+        if self.events is not None:
+            self.events.append(("launch", now))
+        ready_at = now + self.cost_s
+        # force the real device arrays NOW (the tiny graph's true cost is
+        # negligible) and re-wrap as host arrays gated on the deadline
+        lazy = _LazySubgraph(
+            nodes=LazyHostArray(np.asarray(sub.nodes), ready_at,
+                                events=self.events),
+            mask=LazyHostArray(np.asarray(sub.mask), ready_at),
+            dist=LazyHostArray(np.asarray(sub.dist), ready_at),
+        )
+        return lazy, LazyHostArray(np.asarray(seeds), ready_at), n_valid
