@@ -13,8 +13,17 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * scaling             — dense vs workset-compacted subgraph construction
                           over a corpus-size sweep (also writes
                           BENCH_retrieval_scaling.json)
+  * spec_decode         — self-speculative vs one-token decode across draft
+                          windows and prompt repetitiveness (also writes
+                          BENCH_spec_decode.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
+
+``--fast`` shrinks sizes for local iteration.  ``--smoke`` shrinks further
+(tiny sizes, one repeat, single sweep points) so CI can run EVERY section on
+every PR and upload the emitted ``BENCH_*.json`` artifacts — benchmarks that
+only a human ever runs rot silently.  Reduced tiers write ``*.smoke.json``
+so they never clobber the committed full-run artifacts.
 """
 from __future__ import annotations
 
@@ -25,30 +34,47 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
-        "async_serving", "sharding", "scaling",
+        "async_serving", "sharding", "scaling", "spec_decode",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke tier: tiny sizes, one repeat — checks "
+                         "every section still runs and emits its BENCH json")
     args = ap.parse_args()
+    smoke = args.smoke
+    fast = args.fast or smoke
+
+    def bench_path(name: str) -> str:
+        """Smoke/fast tiers must never clobber the committed full-run
+        BENCH_*.json artifacts: reduced-size runs write *.smoke.json
+        (still matched by CI's BENCH_*.json artifact glob)."""
+        return f"BENCH_{name}.smoke.json" if fast else f"BENCH_{name}.json"
 
     from benchmarks import (
         abstract_generation, async_serving, index_sharding, kernels,
-        modality_completion, rag_serving, retrieval_scaling,
+        modality_completion, rag_serving, retrieval_scaling, spec_decode,
     )
 
     print("name,us_per_call,derived")
     if args.only in (None, "retrieval"):
-        kw = dict(n_nodes=4000, query_counts=(10, 100)) if args.fast else {}
+        kw = {} if not fast else (
+            dict(n_nodes=1000, query_counts=(10,)) if smoke else
+            dict(n_nodes=4000, query_counts=(10, 100)))
         for r in retrieval_scaling.run(**kw):
             print(f"retrieval/{r['name']}@q={r['queries']},"
                   f"{r['seconds'] * 1e6:.0f},speedup={r['speedup']:.1f}x")
     if args.only in (None, "completion"):
-        kw = dict(n_users=300, n_items=150, n_inter=3000) if args.fast else {}
+        kw = {} if not fast else (
+            dict(n_users=150, n_items=80, n_inter=1500) if smoke else
+            dict(n_users=300, n_items=150, n_inter=3000))
         for r in modality_completion.run(**kw):
             print(f"completion/{r['name']},0,"
                   f"R@20={r['r@20']:.4f};N@20={r['n@20']:.4f};mse={r['mse']:.3f}")
     if args.only in (None, "abstract"):
-        kw = dict(n_nodes=1000, n_queries=16) if args.fast else {}
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_queries=8) if smoke else
+            dict(n_nodes=1000, n_queries=16))
         for r in abstract_generation.run(**kw):
             print(f"abstract/{r['name']},0,"
                   f"R1={r['rouge1']:.4f};R2={r['rouge2']:.4f};RL={r['rougeL']:.4f}")
@@ -56,39 +82,59 @@ def main() -> None:
         for r in kernels.run():
             print(f"kernels/{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     if args.only in (None, "serving"):
-        kw = dict(n_nodes=1000, n_requests=8, max_new=8) if args.fast else {}
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=6, max_new=6) if smoke else
+            dict(n_nodes=1000, n_requests=8, max_new=8))
         r = rag_serving.run(**kw)
-        rag_serving.write_json(r)
+        rag_serving.write_json(r, bench_path("rag_serving"))
         print(f"serving/fused_vs_seq,{r['fused_s'] * 1e6:.0f},"
               f"ratio={r['throughput_ratio']:.1f}x;"
               f"replay={r['replay_speedup']:.2f}x")
     if args.only in (None, "async_serving"):
-        kw = dict(n_nodes=1000, n_requests=12, max_new=8) if args.fast else {}
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=8, max_new=6, repeats=1,
+                 cost_ratios=(1.0,)) if smoke else
+            dict(n_nodes=1000, n_requests=12, max_new=8))
         rep = async_serving.run(**kw)
-        async_serving.write_json(rep)
+        async_serving.write_json(rep, bench_path("async_serving"))
         for r in rep["results"]:
             print(f"async_serving/cost={r['cost_ratio']:.1f}x,"
                   f"{r['prefetch_s'] * 1e6:.0f},"
                   f"speedup={r['speedup']:.2f}x;"
                   f"hidden={r['hidden_frac']:.2f}")
     if args.only in (None, "sharding"):
-        sizes = (20_000, 50_000) if args.fast else (50_000, 200_000)
+        sizes = (50_000, 200_000) if not fast else (
+            (10_000,) if smoke else (20_000, 50_000))
         rep = index_sharding.run(corpus_sizes=sizes)
-        index_sharding.write_json(rep)
+        index_sharding.write_json(rep, bench_path("index_sharding"))
         for r in rep["results"]:
             print(f"sharding/n={r['n']},{r['brute_sharded_s'] * 1e6:.0f},"
                   f"brute_sharded={r['brute_sharded_speedup']:.2f}x;"
                   f"ivf_tiled={r['ivf_tiled_speedup']:.2f}x")
     if args.only in (None, "scaling"):
-        kw = dict(corpus_sizes=(20_000, 50_000), repeats=1) if args.fast \
-            else {}
+        kw = {} if not fast else (
+            dict(corpus_sizes=(20_000,), repeats=1, n_queries=8) if smoke
+            else dict(corpus_sizes=(20_000, 50_000), repeats=1))
         rep = retrieval_scaling.run_corpus_sweep(**kw)
-        retrieval_scaling.write_json(rep)
+        retrieval_scaling.write_json(rep, bench_path("retrieval_scaling"))
         for r in rep["results"]:
             spd = "-" if r["speedup"] is None else f"{r['speedup']:.2f}x"
             print(f"scaling/{r['strategy']}@n={r['n']},"
                   f"{r['compact_s'] * 1e6:.0f},dense_vs_compact={spd};"
                   f"overflow={r['compact_overflow_frac']:.2f}")
+    if args.only in (None, "spec_decode"):
+        kw = {} if not fast else (
+            dict(n_requests=6, max_new=24, cache_len=96, repeats=1,
+                 windows=(4,), regimes=("repetitive",)) if smoke else
+            dict(n_requests=8, max_new=64, cache_len=160, repeats=2,
+                 windows=(2, 4)))
+        rep = spec_decode.run(**kw)
+        spec_decode.write_json(rep, bench_path("spec_decode"))
+        for r in rep["results"]:
+            print(f"spec_decode/{r['regime']}@W={r['draft_window']},"
+                  f"{r['spec_s'] * 1e6:.0f},"
+                  f"speedup={r['speedup']:.2f}x;"
+                  f"tok_per_step={r['tokens_per_step']:.2f}")
 
 
 if __name__ == "__main__":

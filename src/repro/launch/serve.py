@@ -30,10 +30,20 @@ from repro.models.transformer import model as tm
 from repro.serving import RAGRequest, RAGServeEngine, Request, ServeEngine
 
 
+def _print_decode_stats(ds: dict) -> None:
+    if ds["spec_decode"]:
+        print(f"  spec decode: window={ds['draft_window']}, "
+              f"{ds['tokens_per_step']:.2f} accepted tokens/step, "
+              f"accept rate {ds['draft_accept_rate']:.2f} "
+              f"({ds['decode_steps']} verify dispatches)")
+
+
 def _serve_tokens(cfg, args) -> None:
     params = tm.init_params(jax.random.PRNGKey(0), cfg)
     cache_len = cfg.sliding_window or 128
-    eng = ServeEngine(params, cfg, slots=args.slots, cache_len=cache_len)
+    eng = ServeEngine(params, cfg, slots=args.slots, cache_len=cache_len,
+                      spec_decode=args.spec_decode,
+                      draft_window=args.draft_window)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for u in range(args.requests):
@@ -48,6 +58,7 @@ def _serve_tokens(cfg, args) -> None:
     toks = sum(len(r.out_tokens) for r in done)
     print(f"[{args.arch}] served {len(done)} requests / {toks} tokens "
           f"in {dt:.1f}s ({toks / dt:.1f} tok/s)")
+    _print_decode_stats(eng.decode_stats())
 
 
 def _serve_rag(cfg, args) -> None:
@@ -81,7 +92,9 @@ def _serve_rag(cfg, args) -> None:
                          cache_len=cache_len, cache_policy=args.cache_policy,
                          cache_ttl=args.cache_ttl,
                          prefetch=args.prefetch,
-                         prefetch_depth=args.prefetch_depth)
+                         prefetch_depth=args.prefetch_depth,
+                         spec_decode=args.spec_decode,
+                         draft_window=args.draft_window)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -103,8 +116,10 @@ def _serve_rag(cfg, args) -> None:
     if s["prefetch"]:
         print(f"  prefetch: {s['prefetch_waves']} waves, "
               f"{s['overlap_seconds'] * 1e3:.1f}ms overlapped "
-              f"({s['overlap_steps']} decode steps), "
+              f"({s['overlap_steps']} decode steps / "
+              f"{s['overlap_tokens']} accepted tokens), "
               f"hidden_frac={s['hidden_frac']:.2f}")
+    _print_decode_stats(s)
 
 
 def main():
@@ -142,6 +157,15 @@ def main():
                          "RGL_PREFETCH)")
     ap.add_argument("--prefetch-depth", type=int, default=1,
                     help="max launched-but-uncollected admission waves")
+    ap.add_argument("--spec-decode", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="self-speculative multi-token decode: verify a "
+                         "window of prompt-lookup drafts per jitted step "
+                         "(--no-spec-decode forces one-token decode; "
+                         "default honors RGL_SPEC_DECODE)")
+    ap.add_argument("--draft-window", type=int, default=None,
+                    help="fed tokens per speculative step (1 committed + "
+                         "W-1 drafts; default honors RGL_DRAFT_WINDOW, 4)")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch).reduced_cfg

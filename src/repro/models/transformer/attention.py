@@ -235,6 +235,54 @@ def dense_attention(q, k, v, *, window=None):
     return o.reshape(b, s, h, dh)
 
 
+def verify_attention(
+    q: jnp.ndarray,  # (B, W, H, dh) — RoPE'd queries for W fed tokens
+    k_cache: jnp.ndarray,  # (B, Sc, KV, dh) — incl. the W freshly written rows
+    v_cache: jnp.ndarray,  # (B, Sc, KV, dh)
+    kv_pos: jnp.ndarray,  # (B, Sc) absolute positions, -1 = empty slot
+    q_pos: jnp.ndarray,  # (B, W) absolute position of each fed token
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, Sc, KV) int8-mode absmax
+    v_scale: Optional[jnp.ndarray] = None,  # scales (dequant fused into dots)
+) -> jnp.ndarray:
+    """Multi-query decode attention for speculative draft verification.
+
+    Scores W query positions against the KV arena in one pass.  Query *i* is
+    masked to ``kv_pos <= q_pos[:, i]`` — the exact visibility rule
+    :func:`decode_attention` applies to its single query — so each verified
+    position attends over precisely the cache a sequential decode step at
+    that position would see (fed tokens at later positions are written into
+    the arena but masked out; they only become visible once the query walks
+    past them).
+    """
+    b, w, h, dh = q.shape
+    kvh = k_cache.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, w, kvh, rep, dh)
+    s_ = jnp.einsum(
+        "bwkrd,bckd->bkrwc", qg, k_cache.astype(qg.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (dh**-0.5)  # (B, KV, rep, W, Sc)
+    if k_scale is not None:  # int8 cache: fold dequant scale into the scores
+        s_ = s_ * jnp.transpose(k_scale, (0, 2, 1)).astype(
+            jnp.float32)[:, :, None, None]
+    ok = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[..., None])
+    if window is not None:
+        ok &= (q_pos[..., None] - kv_pos[:, None, :]) < window
+    s_ = jnp.where(ok[:, None, None], s_, NEG)  # (B, KV, rep, W, Sc)
+    p = jax.nn.softmax(s_, axis=-1)
+    if v_scale is not None:  # fold dequant into the probabilities
+        p = p * jnp.transpose(v_scale, (0, 2, 1)).astype(
+            p.dtype)[:, :, None, None]
+        o = jnp.einsum(
+            "bkrwc,bckd->bkrwd", p, v_cache.astype(p.dtype),
+            preferred_element_type=jnp.float32,
+        ).astype(qg.dtype)
+    else:
+        o = jnp.einsum("bkrwc,bckd->bkrwd", p.astype(v_cache.dtype), v_cache)
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(b, w, h, dh)
+
+
 def decode_attention(
     q: jnp.ndarray,  # (B, 1, H, dh) — current-step query (already RoPE'd)
     k_cache: jnp.ndarray,  # (B, Sc, KV, dh) — rotated keys at absolute pos

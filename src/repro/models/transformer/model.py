@@ -371,3 +371,139 @@ def serve_step(params, cache: KVCache, token, cfg: TransformerConfig):
     """Greedy decode step — the unit the decode/long dry-run shapes lower."""
     logits, cache = decode_step(params, cache, token, cfg)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+# --------------------------------------------------------------------------
+# self-speculative verification: score W fed tokens in one dispatch
+# --------------------------------------------------------------------------
+def verify_window(params, cache: KVCache, tokens, cfg: TransformerConfig):
+    """Score a window of fed tokens against the KV arena in ONE dispatch.
+
+    tokens (B, W): column 0 is the last committed token, columns 1..W-1 are
+    draft continuations.  Token *i* is processed at absolute position
+    ``cursor + i``: all W tokens' K/V rows are written first (masked to
+    positions < cache_len so a window near the arena end never wraps onto a
+    live row), then every query attends under the per-position visibility
+    mask of :func:`repro.models.transformer.attention.verify_attention` —
+    each position sees exactly the cache a sequential :func:`decode_step`
+    at that position would see, which is what makes greedy acceptance
+    token-exact against one-token decode.
+
+    Returns (greedy (B, W), cache).  The cache holds all W written rows and
+    an UNCHANGED cursor; :func:`verify_step` rewinds to the first rejection
+    by advancing the cursor only past the accepted prefix.  Rows written for
+    rejected positions are left in place: their ``pos`` values exceed every
+    later query position until the cursor catches up, so the `<=` mask hides
+    them, and the next window overwrites them before any attention runs.
+    """
+    b, w = tokens.shape
+    sc = cache.k.shape[2]
+    cur = cache.cursor  # (B,)
+    positions = cur[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    writable = positions < sc  # never ring-wrap onto live rows
+    slot = positions % sc
+    slot_mask = (jnp.arange(sc, dtype=jnp.int32)[None, None, :]
+                 == slot[..., None]) & writable[..., None]  # (B, W, Sc)
+    x = params["embed"][tokens]  # (B, W, D)
+    new_pos = cache.pos
+    for i in range(w):
+        new_pos = jnp.where(slot_mask[:, i], positions[:, i:i + 1], new_pos)
+    quant = cfg.kv_quant
+
+    def body(x, inputs):
+        p, kc, vc, ks, vs = inputs
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _attn_proj(p, xn, cfg)
+        q = attn.rope(q, positions, cfg.rope_theta)
+        k = attn.rope(k, positions, cfg.rope_theta)
+        if quant:
+            kq, ksc = _quant_rows(k)
+            vq, vsc = _quant_rows(v)
+            for i in range(w):
+                m = slot_mask[:, i][:, :, None, None]
+                kc = jnp.where(m, kq[:, i][:, None], kc)
+                vc = jnp.where(m, vq[:, i][:, None], vc)
+                ks = jnp.where(slot_mask[:, i][:, :, None],
+                               ksc[:, i][:, None], ks)
+                vs = jnp.where(slot_mask[:, i][:, :, None],
+                               vsc[:, i][:, None], vs)
+        else:
+            # one fused masked merge instead of W sequential full-array
+            # passes: ring slots within a window are distinct, so the
+            # one-hot contraction selects exactly one (w) row per written
+            # slot — multiply-by-one/add-zero keeps the merge bitwise
+            # identical to the sequential wheres
+            onehot = slot_mask.astype(k.dtype)  # (B, W, Sc)
+            wrote = slot_mask.any(axis=1)[:, :, None, None]  # (B, Sc, 1, 1)
+            kc = jnp.where(wrote, jnp.einsum("bws,bwkd->bskd", onehot, k), kc)
+            vc = jnp.where(wrote, jnp.einsum("bws,bwkd->bskd", onehot, v), vc)
+        o = attn.verify_attention(
+            q, kc, vc, new_pos, positions, cfg.sliding_window,
+            k_scale=ks, v_scale=vs,
+        )
+        x = x + (o.reshape(b, w, -1) @ p["wo"]).astype(x.dtype)
+        xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = (jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])) @ p["w2"]
+        else:
+            y, _ = moe_ffn(p["moe"], xn.reshape(b * w, -1), cfg.moe)
+            y = y.reshape(b, w, -1)
+        return x + y.astype(x.dtype), (kc, vc, ks, vs)
+
+    xs = (params["layers"], cache.k, cache.v, cache.k_scale, cache.v_scale)
+    if cfg.scan_layers:
+        x, (kc, vc, ks, vs) = jax.lax.scan(body, x, xs)
+    else:  # unrolled (cost-analysis variants)
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            x, o_i = body(x, sl)
+            outs.append(o_i)
+        cols = list(zip(*outs))
+        kc, vc = jnp.stack(cols[0]), jnp.stack(cols[1])
+        ks = jnp.stack(cols[2]) if quant else None
+        vs = jnp.stack(cols[3]) if quant else None
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, W)
+    new_cache = KVCache(k=kc, v=vc, pos=new_pos, cursor=cache.cursor,
+                        k_scale=ks, v_scale=vs)
+    return greedy, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "eos_id"))
+def verify_step(params, cache: KVCache, tokens, room,
+                cfg: TransformerConfig, eos_id=None):
+    """One speculative engine step: verify W fed tokens, accept the greedy-
+    matching prefix, rewind the cache cursor to the first rejection.
+
+    tokens (B, W): [committed last token, draft_1 .. draft_{W-1}].
+    room (B,): per-slot cap on accepted tokens this step
+    (``min(max_new_tokens remaining, cache_len - cursor)``; clamped to
+    >= 1 here, so a dead slot's cursor still drifts — by 1 to W per step
+    depending on its stale room — until admission re-pins it).
+
+    Acceptance is greedy-exact: position 0's output is always accepted (it
+    is what one-token decode would emit); draft *i* is accepted iff it equals
+    the accepted output at position *i-1*, so the accepted prefix is bitwise
+    identical to step-by-step decode.  ``eos_id`` truncates the accepted
+    prefix just past the first EOS, mirroring the sequential stop check.
+
+    Returns (greedy (B, W), accepted (B,) in [1, W], next committed token
+    (B,), cache with ``cursor += accepted``).
+    """
+    b, w = tokens.shape
+    greedy, cache = verify_window(params, cache, tokens, cfg)
+    match = (tokens[:, 1:] == greedy[:, :-1]).astype(jnp.int32)  # (B, W-1)
+    raw = 1 + jnp.cumprod(match, axis=1).sum(axis=1)  # (B,) in [1, W]
+    accepted = jnp.minimum(raw, jnp.maximum(room, 1))
+    if eos_id is not None:
+        idx = jnp.arange(w, dtype=jnp.int32)[None, :]
+        is_eos = (greedy == eos_id) & (idx < accepted[:, None])
+        first_eos = jnp.min(jnp.where(is_eos, idx, w), axis=1)
+        accepted = jnp.minimum(accepted, first_eos + 1)
+    cur_tok = jnp.take_along_axis(greedy, (accepted - 1)[:, None], axis=1)[:, 0]
+    cache = KVCache(k=cache.k, v=cache.v, pos=cache.pos,
+                    cursor=cache.cursor + accepted,
+                    k_scale=cache.k_scale, v_scale=cache.v_scale)
+    return greedy, accepted, cur_tok, cache

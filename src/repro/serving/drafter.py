@@ -1,0 +1,62 @@
+"""Prompt-lookup drafter for self-speculative decode.
+
+No second model: drafts for each slot come from the request's OWN token
+history (prompt + everything emitted so far).  The drafter finds the most
+recent *earlier* occurrence of the history's trailing bigram (falling back
+to the trailing unigram) and proposes the tokens that followed it — the
+prompt-lookup / n-gram scheme that pays off exactly when generation is
+repetitive: copy-heavy RAG answers that quote retrieved node text, and the
+short greedy cycles small LMs collapse into.
+
+The lookup is a fixed-shape jitted device computation over the (slots,
+hist_cap) history arena: no per-slot Python, fused into the engine's single
+jitted speculative step, output shape (slots, n_draft) regardless of how
+many slots are live.  Wrong drafts cost nothing in correctness — the verify
+pass rejects them — so dead slots just propose garbage that gets rejected.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_draft",))
+def draft_tokens(hist, hist_len, n_draft: int):
+    """Propose ``n_draft`` continuation tokens per slot from its history.
+
+    hist (B, H) int32 token history per slot, left-aligned: prompt tokens
+    followed by every emitted token (the last valid entry is the slot's
+    current committed token).  hist_len (B,) valid counts (0 for dead
+    slots).  Returns (B, n_draft) int32 drafts: the continuation after the
+    most recent earlier match of the trailing bigram (unigram fallback),
+    extrapolated *cyclically* — when the continuation runs off the end of
+    history, it wraps back to the match point, so a locked period-p loop
+    (the steady state greedy decode collapses into) is drafted exactly for
+    ANY p, not just p = 1.  Where no match exists at all, the draft repeats
+    the last committed token, catching period-1 onset one step before a
+    lookup can; a wrong guess is simply rejected by verification.
+    """
+    b, h = hist.shape
+    idx = jnp.arange(h, dtype=jnp.int32)[None, :]  # (1, H)
+    ln = hist_len[:, None].astype(jnp.int32)  # (B, 1)
+    last = jnp.take_along_axis(hist, jnp.maximum(ln - 1, 0), axis=1)  # (B, 1)
+    prev = jnp.take_along_axis(hist, jnp.maximum(ln - 2, 0), axis=1)
+    shifted = jnp.concatenate(
+        [jnp.full((b, 1), -1, jnp.int32), hist[:, :-1]], axis=1
+    )  # shifted[j] = hist[j-1]
+    cont = idx <= ln - 2  # a continuation token exists at idx + 1
+    bigram = (hist == last) & (shifted == prev) & cont & (idx >= 1) & (ln >= 2)
+    unigram = (hist == last) & cont & (ln >= 1)
+    j_big = jnp.max(jnp.where(bigram, idx, -1), axis=1)  # most recent match
+    j_uni = jnp.max(jnp.where(unigram, idx, -1), axis=1)
+    j = jnp.where(j_big >= 0, j_big, j_uni)  # (B,) -1 = no match
+    # continuation positions j+1 .. , wrapped modulo the distance from the
+    # match to the end of history (= the loop period when generation has
+    # locked into a cycle), so every draft position stays inside history
+    period = jnp.maximum(ln[:, 0] - 1 - j, 1)[:, None]  # (B, 1)
+    off = jnp.arange(n_draft, dtype=jnp.int32)[None, :]
+    pos = j[:, None] + 1 + off % period
+    draft = jnp.take_along_axis(hist, jnp.clip(pos, 0, h - 1), axis=1)
+    return jnp.where(j[:, None] >= 0, draft, last).astype(jnp.int32)

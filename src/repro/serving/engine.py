@@ -2,7 +2,7 @@
 
 vLLM-style scheduling adapted to TPU constraints (static shapes): a fixed
 (B, cache_len) KV arena; each of the B slots holds one in-flight request.
-Every engine step runs ONE jitted decode step for all slots.  Admission is
+Every engine step runs ONE jitted dispatch for all slots.  Admission is
 batched too: all free slots are refilled together by a single masked batched
 prefill — prompts are padded to a shared length bucket, run through one
 ``tm.prefill`` call, and the resulting cache rows are merged into the arena
@@ -11,6 +11,20 @@ with one jitted masked update (never reshaping, never per-slot dispatch).
 Length bucketing keeps recompilation bounded: the prefill trace is specialized
 on (slots, bucket) only, so at most O(log cache_len) prefill programs exist
 over the lifetime of the engine.
+
+Two decode modes share the arena:
+
+* **one-token** (default) — each step is one ``tm.serve_step``: one jitted
+  dispatch per output token, so tok/s is bounded by per-step dispatch
+  overhead.
+* **self-speculative** (``spec_decode=True`` or ``RGL_SPEC_DECODE=1``) —
+  each step drafts a window of ``draft_window`` tokens per slot from the
+  request's own prompt+output history (:mod:`repro.serving.drafter`, no
+  second model) and verifies all of them in ONE jitted ``tm.verify_step``
+  dispatch.  Greedy argmax verification accepts the longest draft prefix
+  that matches what one-token decode would have emitted, so outputs are
+  bitwise identical to the one-token schedule while each dispatch can
+  commit up to ``draft_window`` tokens (see ``tests/test_spec_decode.py``).
 
 This engine serves already-tokenized prompts.  For the fused
 retrieval-to-generation front-end (the RGL "unified system" claim), see
@@ -21,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from collections import deque
 from typing import Optional
 
@@ -30,6 +45,20 @@ import numpy as np
 
 from repro.models.transformer import model as tm
 from repro.models.transformer.config import TransformerConfig
+from repro.serving.drafter import draft_tokens
+
+
+def env_flag(name: str) -> bool:
+    """Truthy env toggle: only explicit affirmative values enable — anything
+    else (including "no"/"disabled"/unset) stays off."""
+    return os.environ.get(name, "").lower() in ("1", "true", "on", "yes")
+
+
+def _draft_window_default() -> int:
+    try:
+        return max(2, int(os.environ.get("RGL_DRAFT_WINDOW", "4")))
+    except ValueError:
+        return 4
 
 
 @dataclasses.dataclass
@@ -57,6 +86,45 @@ def _prefill_batch(params, toks, tl, cfg: TransformerConfig, cache_len: int):
     """Module-level jit so traces are shared across engine instances —
     constructing a fresh engine must not recompile the serving programs."""
     return tm.prefill(params, toks, tl, cfg, cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_draft", "eos_id"))
+def _spec_step(params, cache, cur_tok, hist, hist_len, max_new, out_len,
+               cfg: TransformerConfig, n_draft: int, eos_id):
+    """ONE fused dispatch per speculative engine step: prompt-lookup draft,
+    per-slot acceptance room, windowed verify, acceptance + cursor rewind,
+    and the history append of the accepted tokens.  Keeping the drafter,
+    the room computation, and the history update inside the same jit
+    matters on dispatch-bound hosts: at small model sizes each extra jitted
+    call or host->device transfer costs about as much as the verify compute
+    itself, so the host only downloads (greedy, accepted) per step and only
+    uploads state at admission waves.
+
+    max_new / out_len (B,) int32 are device mirrors of each slot's token
+    budget and emitted count (pinned at admission, advanced here), so
+    ``room = min(max_new - out_len, cache_len - cursor)`` — the clamp that
+    keeps a window from overshooting ``max_new_tokens`` or the arena —
+    never syncs the host.
+    """
+    drafts = draft_tokens(hist, hist_len, n_draft)
+    fed = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
+    sc = cache.k.shape[2]
+    room = jnp.minimum(max_new - out_len, sc - cache.cursor).astype(jnp.int32)
+    greedy, accepted, nxt, cache = tm.verify_step(
+        params, cache, fed, room, cfg, eos_id=eos_id
+    )
+    # append the accepted tokens to each slot's history (device-resident:
+    # the host never re-uploads the arena between admissions)
+    h = hist.shape[1]
+    cols = jnp.arange(h, dtype=jnp.int32)[None, :]
+    for i in range(n_draft + 1):
+        write = (i < accepted)[:, None] & (cols == (hist_len + i)[:, None])
+        hist = jnp.where(write, greedy[:, i:i + 1], hist)
+    hist_len = jnp.minimum(hist_len + accepted, h)
+    # pack (greedy, accepted) into ONE host-bound buffer: the engine's per-
+    # step sync is a single device->host transfer, like one-token decode's
+    packed = jnp.concatenate([greedy, accepted[:, None]], axis=1)
+    return packed, nxt, cache, hist, hist_len, out_len + accepted
 
 
 @jax.jit
@@ -99,22 +167,63 @@ class ServeEngine:
         eng = ServeEngine(params, cfg, slots=8, cache_len=512)
         eng.submit(Request(uid=0, prompt_ids=ids, max_new_tokens=32))
         finished = eng.run_to_completion()
+
+    ``spec_decode=None`` reads the ``RGL_SPEC_DECODE`` env var (default
+    off); ``draft_window`` defaults to ``RGL_DRAFT_WINDOW`` (4).
     """
 
     def __init__(
         self, params, cfg: TransformerConfig, *, slots: int = 8,
         cache_len: int = 512, eos_id: Optional[int] = None,
+        spec_decode: Optional[bool] = None, draft_window: Optional[int] = None,
     ):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
         self.eos_id = eos_id
+        self.spec_decode = env_flag("RGL_SPEC_DECODE") if spec_decode is None \
+            else bool(spec_decode)
+        self.draft_window = _draft_window_default() if draft_window is None \
+            else int(draft_window)
+        if self.spec_decode and self.draft_window < 2:
+            raise ValueError(
+                f"draft_window must be >= 2 (1 committed token + >= 1 draft),"
+                f" got {self.draft_window}"
+            )
         self.queue: deque = deque()
         self.active: list = [None] * slots
         self.cache = tm.init_cache(cfg, slots, cache_len)
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.live = np.zeros(slots, bool)
+        # per-slot token history arena for the prompt-lookup drafter:
+        # prompt + every emitted token, left-aligned.  hist_cap bounds the
+        # total (prompt < cache_len, decode stops at cursor == cache_len).
+        # The host mirror is written at admission and uploaded once per
+        # admission wave; between admissions the device copy evolves inside
+        # _spec_step and the mirror tracks it via _hist_append.
+        self._hist_cap = cache_len + 1
+        self.hist = np.zeros((slots, self._hist_cap), np.int32)
+        self.hist_len = np.zeros((slots,), np.int32)
+        self._hist_dev = jnp.asarray(self.hist)
+        self._hist_len_dev = jnp.asarray(self.hist_len)
+        # host-tracked cursor mirror: admission pins it to the prompt length,
+        # every decode dispatch advances it by the committed token count, so
+        # finish checks and speculative room never sync on the device cursor
+        self._cursor = np.zeros((slots,), np.int64)
+        # device mirrors of each slot's token budget / emitted count for the
+        # in-jit acceptance-room clamp (uploaded only at admission waves)
+        self._max_new = np.ones((slots,), np.int32)
+        self._out_len = np.zeros((slots,), np.int32)
+        self._max_new_dev = jnp.asarray(self._max_new)
+        self._out_len_dev = jnp.asarray(self._out_len)
+        # decode telemetry (both modes): dispatches vs tokens committed
+        self.decode_steps = 0  # jitted decode/verify dispatches
+        self.slot_steps = 0  # live-slot decode opportunities (slots x steps)
+        self.emitted_tokens = 0  # all tokens committed (incl. prefill firsts)
+        self.decode_tokens = 0  # tokens committed by decode dispatches
+        self.draft_proposed = 0  # draft tokens fed to verification
+        self.draft_accepted = 0  # drafts accepted (excludes the free token)
 
     @property
     def free_slots(self) -> int:
@@ -132,11 +241,15 @@ class ServeEngine:
             )
         self.queue.append(req)
 
-    def _admit(self) -> None:
+    def _admit(self) -> list:
+        """Refill free slots with one masked batched prefill.  Returns the
+        requests that finish AT admission (first token hits EOS, or
+        ``max_new_tokens == 1``) — they never occupy a live slot, so a
+        request can never emit more than ``max_new_tokens`` tokens."""
         free = [i for i in range(self.slots) if not self.live[i]]
         take = min(len(free), len(self.queue))
         if take == 0:
-            return
+            return []
         reqs = [self.queue.popleft() for _ in range(take)]
         slot_ids = free[:take]
         # one masked batched prefill: batch padded to `slots` rows, lengths
@@ -164,38 +277,147 @@ class ServeEngine:
             jnp.asarray(rows), jnp.asarray(newly),
         )
         first_np = np.asarray(first)
+        finished = []
         for j, i in enumerate(slot_ids):
             req = reqs[j]
-            req.out_tokens.append(int(first_np[j]))
+            tok0 = int(first_np[j])
+            req.out_tokens.append(tok0)
+            self.emitted_tokens += 1
+            self._cursor[i] = tl[j]  # merge pinned this slot's device cursor
+            hit_eos = self.eos_id is not None and tok0 == self.eos_id
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                # done at admission: the arena row was written but the slot
+                # never goes live, so the next wave simply reuses it
+                req.done = True
+                finished.append(req)
+                continue
             self.active[i] = req
             self.live[i] = True
+            L = len(req.prompt_ids)
+            self.hist[i, :L] = np.asarray(req.prompt_ids, np.int32)
+            self.hist[i, L] = tok0
+            self.hist_len[i] = L + 1
+            self._max_new[i] = req.max_new_tokens
+            self._out_len[i] = 1
+        if self.spec_decode:
+            self._hist_dev = jnp.asarray(self.hist)
+            self._hist_len_dev = jnp.asarray(self.hist_len)
+            self._max_new_dev = jnp.asarray(self._max_new)
+            self._out_len_dev = jnp.asarray(self._out_len)
+        return finished
+
+    def _hist_append(self, i: int, toks: list) -> None:
+        hl = int(self.hist_len[i])
+        n = min(len(toks), self._hist_cap - hl)
+        if n > 0:
+            self.hist[i, hl:hl + n] = toks[:n]
+            self.hist_len[i] = hl + n
+
+    def _finish_check(self, i: int, req: Request, last_tok: int,
+                      cursor_i: int, finished: list) -> None:
+        hit_eos = self.eos_id is not None and last_tok == self.eos_id
+        full = (
+            len(req.out_tokens) >= req.max_new_tokens
+            or cursor_i >= self.cache_len
+        )
+        if hit_eos or full:
+            req.done = True
+            finished.append(req)
+            self.active[i] = None
+            self.live[i] = False
 
     # -- one decode step for every live slot ----------------------------------
     def step(self) -> list:
-        self._admit()
+        finished = self._admit()
         if not self.live.any():
-            return []
+            return finished
+        if self.spec_decode:
+            finished.extend(self._step_spec())
+        else:
+            finished.extend(self._step_one())
+        return finished
+
+    def _step_one(self) -> list:
+        """One-token decode: one jitted dispatch emits one token per slot."""
         nxt, self.cache = tm.serve_step(
             self.params, self.cache, self.cur_tok, self.cfg
         )
         self.cur_tok = nxt
+        self.decode_steps += 1
+        self._cursor += 1  # decode_step advances every slot's cursor
         finished = []
         toks = np.asarray(nxt)
         for i, req in enumerate(self.active):
             if req is None or not self.live[i]:
                 continue
-            req.out_tokens.append(int(toks[i]))
-            hit_eos = self.eos_id is not None and int(toks[i]) == self.eos_id
-            full = (
-                len(req.out_tokens) >= req.max_new_tokens
-                or int(self.cache.cursor[i]) >= self.cache_len
-            )
-            if hit_eos or full:
-                req.done = True
-                finished.append(req)
-                self.active[i] = None
-                self.live[i] = False
+            t = int(toks[i])
+            req.out_tokens.append(t)
+            self.emitted_tokens += 1
+            self.decode_tokens += 1
+            self.slot_steps += 1
+            self._hist_append(i, [t])
+            self._finish_check(i, req, t, int(self._cursor[i]), finished)
         return finished
+
+    def _step_spec(self) -> list:
+        """Self-speculative decode: draft ``W-1`` tokens per slot from its
+        own history, verify all of them, and commit the greedy-matching
+        prefix (1..W tokens per slot) — all in ONE jitted dispatch."""
+        w = self.draft_window
+        # acceptance room is computed in-jit from the device mirrors; both
+        # terms are >= 1 for a live slot (admission retires len >= max_new
+        # immediately, decode retires cursor >= cache_len).  Dead slots run
+        # with whatever stale room their mirrors imply (clamped >= 1, so up
+        # to W of drift per step) — harmless: writes stay masked at the
+        # arena edge and admission re-pins cursor/mirrors before reuse
+        (packed, self.cur_tok, self.cache, self._hist_dev,
+         self._hist_len_dev, self._out_len_dev) = _spec_step(
+            self.params, self.cache, self.cur_tok, self._hist_dev,
+            self._hist_len_dev, self._max_new_dev, self._out_len_dev,
+            self.cfg, w - 1, self.eos_id,
+        )
+        self.decode_steps += 1
+        finished = []
+        packed_np = np.asarray(packed)  # the step's single host sync
+        g_np, acc_np = packed_np[:, :w], packed_np[:, w]
+        self._cursor += acc_np  # verify_step advanced every slot by accepted
+        self._out_len += acc_np  # keep the host mirror bitwise in step
+        for i, req in enumerate(self.active):
+            if req is None or not self.live[i]:
+                continue
+            a = int(acc_np[i])
+            emitted = g_np[i, :a].tolist()
+            req.out_tokens.extend(emitted)
+            self.emitted_tokens += a
+            self.decode_tokens += a
+            self.slot_steps += 1
+            self.draft_proposed += w - 1
+            self.draft_accepted += a - 1
+            self._hist_append(i, emitted)
+            self._finish_check(i, req, emitted[-1], int(self._cursor[i]),
+                               finished)
+        return finished
+
+    def decode_stats(self) -> dict:
+        """Dispatch-amortization telemetry.  ``tokens_per_step`` is the mean
+        number of tokens a live slot commits per jitted decode dispatch —
+        exactly 1.0 in one-token mode, up to ``draft_window`` under
+        speculation — i.e. the accepted-tokens/step signal, normalized per
+        slot so batch occupancy does not inflate it."""
+        return {
+            "spec_decode": self.spec_decode,
+            "draft_window": self.draft_window if self.spec_decode else 1,
+            "decode_steps": self.decode_steps,
+            "emitted_tokens": self.emitted_tokens,
+            "decode_tokens": self.decode_tokens,
+            "draft_proposed": self.draft_proposed,
+            "draft_accepted": self.draft_accepted,
+            "tokens_per_step": self.decode_tokens / max(self.slot_steps, 1),
+            "draft_accept_rate": (
+                self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else 0.0
+            ),
+        }
 
     def run_to_completion(self, max_steps: int = 10_000) -> list:
         """Step until every request drains.  Raises if ``max_steps`` elapse

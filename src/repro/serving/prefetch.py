@@ -50,6 +50,11 @@ Telemetry (merged into ``RAGServeEngine.stats()``):
   early, the tail of the window hid nothing.
 * ``overlap_steps`` — engine steps executed between a wave's launch and its
   collect (the overlap-oracle signal).
+* ``overlap_tokens`` — tokens *committed* by the engine between a wave's
+  launch and its collect.  Under self-speculative decode one engine step
+  commits up to ``draft_window`` tokens, so steps systematically undercount
+  the decode work that hid the retrieval; accepted tokens are the
+  schedule-invariant measure.
 * ``hidden_frac`` — ``overlap / (overlap + block)``: the fraction of each
   wave's in-flight window not paid as blocking time.  Near 1.0 means
   retrieval was never the bottleneck (either genuinely hidden or simply
@@ -80,6 +85,7 @@ class PrefetchWave:
     seeds: object = None
     launched_at: float = 0.0  # clock at dispatch return
     launch_step: int = 0  # engine step counter at launch
+    launch_tokens: int = 0  # engine emitted-token counter at launch
     entries_by_key: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -121,6 +127,7 @@ class AdmissionPrefetcher:
         self.block_seconds = 0.0
         self.overlap_seconds = 0.0
         self.overlap_steps = 0
+        self.overlap_tokens = 0
 
     @property
     def in_flight(self) -> int:
@@ -145,7 +152,8 @@ class AdmissionPrefetcher:
         return None
 
     # -- launch ---------------------------------------------------------------
-    def launch(self, reqs: list, *, step: int = 0) -> PrefetchWave:
+    def launch(self, reqs: list, *, step: int = 0,
+               tokens: int = 0) -> PrefetchWave:
         """Dispatch one admission wave without forcing any device array.
 
         Cache lookups and hit/miss accounting happen here, mirroring the
@@ -159,7 +167,7 @@ class AdmissionPrefetcher:
         t0 = self._now()
         wave = PrefetchWave(
             reqs=reqs, entry_for=[None] * len(reqs), miss_groups={},
-            deferred=[], launch_step=step,
+            deferred=[], launch_step=step, launch_tokens=tokens,
         )
         for j, r in enumerate(reqs):
             k = cache.key(r.query_emb)
@@ -206,7 +214,8 @@ class AdmissionPrefetcher:
         return wave
 
     # -- collect --------------------------------------------------------------
-    def collect(self, *, step: int = 0, sync: bool = False) -> list:
+    def collect(self, *, step: int = 0, tokens: int = 0,
+                sync: bool = False) -> list:
         """Block on the oldest wave and return ``(request, entry)`` pairs in
         arrival order.  ``sync=True`` marks a launch-then-collect-immediately
         schedule: no overlap is accrued (there was no window to hide in)."""
@@ -221,6 +230,7 @@ class AdmissionPrefetcher:
             self.waves += 1
             self.overlap_seconds += max(0.0, t0 - wave.launched_at)
             self.overlap_steps += max(0, step - wave.launch_step)
+            self.overlap_tokens += max(0, tokens - wave.launch_tokens)
         try:
             if wave.has_misses:
                 nodes = np.asarray(wave.sub.nodes)  # blocks until done
@@ -274,6 +284,7 @@ class AdmissionPrefetcher:
             "prefetch_waves": self.waves,
             "overlap_seconds": self.overlap_seconds,
             "overlap_steps": self.overlap_steps,
+            "overlap_tokens": self.overlap_tokens,
             "launch_seconds": self.launch_seconds,
             "collect_block_seconds": self.block_seconds,
             "hidden_frac": self.overlap_seconds / denom if denom > 0 else 0.0,

@@ -29,11 +29,14 @@ inside one engine.  Three amortization mechanisms drive throughput:
 
 Generation itself rides the slot-based :class:`~repro.serving.engine.ServeEngine`
 (one jitted decode step for all slots, masked batched prefill admission).
+``spec_decode`` / ``RGL_SPEC_DECODE=1`` switches the decode arena to
+self-speculative multi-token decode (prompt-lookup drafts verified in one
+dispatch; bitwise-identical outputs, up to ``draft_window`` tokens committed
+per dispatch) — see :mod:`repro.serving.engine`.
 """
 from __future__ import annotations
 
 import dataclasses
-import os
 from collections import deque
 from typing import Optional
 
@@ -42,7 +45,7 @@ import numpy as np
 from repro.core.pipeline import RGLPipeline
 from repro.models.transformer.config import TransformerConfig
 from repro.serving.cache import RetrievalCache
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeEngine, env_flag
 from repro.serving.prefetch import AdmissionPrefetcher
 
 
@@ -50,8 +53,7 @@ def _prefetch_default() -> bool:
     """``RGL_PREFETCH`` env toggle, so the whole test/CI matrix can flip the
     admission schedule without touching call sites.  Only explicit truthy
     values enable it — anything else (including "no"/"disabled") stays sync."""
-    return os.environ.get("RGL_PREFETCH", "").lower() in ("1", "true", "on",
-                                                          "yes")
+    return env_flag("RGL_PREFETCH")
 
 
 @dataclasses.dataclass
@@ -98,6 +100,8 @@ class RAGServeEngine:
         cache_ttl: Optional[float] = None,
         prefetch: Optional[bool] = None,
         prefetch_depth: int = 1,
+        spec_decode: Optional[bool] = None,
+        draft_window: Optional[int] = None,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
@@ -109,7 +113,8 @@ class RAGServeEngine:
         self.pipeline = pipeline
         self.slots = slots
         self.engine = ServeEngine(
-            params, cfg, slots=slots, cache_len=cache_len, eos_id=eos_id
+            params, cfg, slots=slots, cache_len=cache_len, eos_id=eos_id,
+            spec_decode=spec_decode, draft_window=draft_window,
         )
         self.cache = retrieval_cache if retrieval_cache is not None else \
             RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps,
@@ -180,14 +185,16 @@ class RAGServeEngine:
         reqs = self._take_wave()
         if not reqs:
             return
-        self.prefetcher.launch(reqs, step=self._step_no)
+        tok = self.engine.emitted_tokens
+        self.prefetcher.launch(reqs, step=self._step_no, tokens=tok)
         self._tokenize_and_admit(
-            self.prefetcher.collect(step=self._step_no, sync=True)
+            self.prefetcher.collect(step=self._step_no, tokens=tok, sync=True)
         )
 
     def _launch_pending(self) -> None:
         while self.pending and self.prefetcher.can_launch():
-            self.prefetcher.launch(self._take_wave(), step=self._step_no)
+            self.prefetcher.launch(self._take_wave(), step=self._step_no,
+                                   tokens=self.engine.emitted_tokens)
 
     def _admit_prefetch(self) -> None:
         """Prefetch schedule: collect waves as decode slots free up
@@ -203,7 +210,9 @@ class RAGServeEngine:
             # forfeit its whole overlap window, e.g. under trickle load
             # where wave size < free slots) — except via the idle-arena
             # fast path below, where there is nothing to overlap with
-            resolved = self.prefetcher.collect(step=self._step_no)
+            resolved = self.prefetcher.collect(
+                step=self._step_no, tokens=self.engine.emitted_tokens
+            )
             self._launch_pending()
             self._tokenize_and_admit(resolved)
         self._launch_pending()
@@ -211,7 +220,8 @@ class RAGServeEngine:
                 and self.prefetcher.in_flight):
             # idle arena: nothing to overlap with, don't stall a step
             self._tokenize_and_admit(
-                self.prefetcher.collect(step=self._step_no)
+                self.prefetcher.collect(step=self._step_no,
+                                        tokens=self.engine.emitted_tokens)
             )
 
     # -- stepping -------------------------------------------------------------
@@ -257,5 +267,6 @@ class RAGServeEngine:
             retrieval_seconds=self.retrieval_seconds,
             prefetch=self.prefetch,
             **self.prefetcher.stats(),
+            **self.engine.decode_stats(),
         )
         return s
