@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * spec_decode         — self-speculative vs one-token decode across draft
                           windows and prompt repetitiveness (also writes
                           BENCH_spec_decode.json)
+  * paged_kv            — paged-arena indirection overhead + wave vs
+                          continuous admission on a skewed request mix
+                          (also writes BENCH_paged_kv.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 
@@ -34,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
-        "async_serving", "sharding", "scaling", "spec_decode",
+        "async_serving", "sharding", "scaling", "spec_decode", "paged_kv",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
@@ -53,7 +56,8 @@ def main() -> None:
 
     from benchmarks import (
         abstract_generation, async_serving, index_sharding, kernels,
-        modality_completion, rag_serving, retrieval_scaling, spec_decode,
+        modality_completion, paged_kv, rag_serving, retrieval_scaling,
+        spec_decode,
     )
 
     print("name,us_per_call,derived")
@@ -135,6 +139,19 @@ def main() -> None:
                   f"{r['spec_s'] * 1e6:.0f},"
                   f"speedup={r['speedup']:.2f}x;"
                   f"tok_per_step={r['tokens_per_step']:.2f}")
+    if args.only in (None, "paged_kv"):
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=8, short_new=4, long_new=16,
+                 repeats=1) if smoke else
+            dict(n_nodes=1000, n_requests=12, short_new=6, long_new=24))
+        rep = paged_kv.run(**kw)
+        paged_kv.write_json(rep, bench_path("paged_kv"))
+        ind, skew = rep["indirection"], rep["skewed_admission"]
+        print(f"paged_kv/indirection,{ind['paged_s'] * 1e6:.0f},"
+              f"overhead={ind['paged_overhead'] * 100:+.1f}%;"
+              f"residency={ind['kv_residency_frac']:.2f}")
+        print(f"paged_kv/skewed_admission,{skew['continuous_s'] * 1e6:.0f},"
+              f"continuous_vs_wave={skew['speedup']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,13 @@ def _print_decode_stats(ds: dict) -> None:
               f"{ds['tokens_per_step']:.2f} accepted tokens/step, "
               f"accept rate {ds['draft_accept_rate']:.2f} "
               f"({ds['decode_steps']} verify dispatches)")
+    if ds.get("paged_kv"):
+        print(f"  paged KV: block={ds['block_size']} tokens, "
+              f"pool={ds['pool_blocks']} blocks, "
+              f"high water {ds['pool_high_water_blocks']} blocks")
+    if ds.get("truncations"):
+        print(f"  truncations: {ds['truncations']} request(s) retired by KV "
+              f"exhaustion before reaching max_new_tokens")
 
 
 def _serve_tokens(cfg, args) -> None:
@@ -43,7 +50,9 @@ def _serve_tokens(cfg, args) -> None:
     cache_len = cfg.sliding_window or 128
     eng = ServeEngine(params, cfg, slots=args.slots, cache_len=cache_len,
                       spec_decode=args.spec_decode,
-                      draft_window=args.draft_window)
+                      draft_window=args.draft_window,
+                      paged_kv=args.paged_kv, block_size=args.kv_block,
+                      pool_blocks=args.pool_blocks)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for u in range(args.requests):
@@ -93,8 +102,12 @@ def _serve_rag(cfg, args) -> None:
                          cache_ttl=args.cache_ttl,
                          prefetch=args.prefetch,
                          prefetch_depth=args.prefetch_depth,
+                         admission=args.admission,
                          spec_decode=args.spec_decode,
-                         draft_window=args.draft_window)
+                         draft_window=args.draft_window,
+                         paged_kv=args.paged_kv,
+                         kv_block_size=args.kv_block,
+                         kv_pool_blocks=args.pool_blocks)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -155,8 +168,30 @@ def main():
                          "wave's retrieval with the current decode steps "
                          "(--no-prefetch forces sync; default honors "
                          "RGL_PREFETCH)")
-    ap.add_argument("--prefetch-depth", type=int, default=1,
-                    help="max launched-but-uncollected admission waves")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="max launched-but-uncollected admission waves "
+                         "(default: slots when --admission continuous, "
+                         "else 1)")
+    ap.add_argument("--admission", default=None,
+                    choices=["wave", "continuous"],
+                    help="admission granularity for --rag: whole waves, or "
+                         "per-request launch/collect so a slow retrieval "
+                         "row only delays its own request (default honors "
+                         "RGL_ADMISSION, 'wave')")
+    ap.add_argument("--paged-kv", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="paged KV pool: block-table indirection over "
+                         "fixed-size blocks; slots return blocks the step "
+                         "they retire (--no-paged-kv forces the contiguous "
+                         "arena; default honors RGL_PAGED_KV)")
+    ap.add_argument("--kv-block", type=int, default=None,
+                    help="tokens per KV block (must divide cache_len; "
+                         "default: largest divisor <= 16, or RGL_KV_BLOCK)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="total blocks in the shared KV pool (default "
+                         "slots*cache_len/block — full capacity; smaller "
+                         "values save memory and may truncate long "
+                         "generations under pressure)")
     ap.add_argument("--spec-decode", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="self-speculative multi-token decode: verify a "

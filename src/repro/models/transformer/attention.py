@@ -335,3 +335,68 @@ def decode_attention(
     o = jnp.einsum("bkrc,bckd->bkrd", (e_c / den).astype(v_cache.dtype), v_cache)
     o = o + (e_s / den).astype(v_new.dtype) * v_new[:, 0][:, :, None, :]
     return o.reshape(b, 1, h, dh)
+
+
+# --------------------------------------------------------------------------
+# paged KV: block-table indirection in front of the decode/verify kernels
+# --------------------------------------------------------------------------
+def paged_gather(pool: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a per-slot contiguous view out of a shared paged pool.
+
+    ``pool`` (P, ...) holds the physical rows of every slot's KV blocks;
+    ``rows`` (B, Sc) maps each slot's logical arena row to its pool row
+    (pre-clamped to 0 under unallocated blocks — see
+    ``repro.models.transformer.model.block_rows``).  One advanced-indexing
+    gather -> (B, Sc, ...), the exact layout the contiguous kernels take.
+    """
+    return pool[rows]
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, dh) — current-step query (already RoPE'd)
+    k_pool: jnp.ndarray,  # (P, KV, dh) — this layer's shared block pool
+    v_pool: jnp.ndarray,  # (P, KV, dh)
+    rows: jnp.ndarray,  # (B, Sc) block-table row map (see paged_gather)
+    kv_pos: jnp.ndarray,  # (B, Sc) absolute positions, -1 = empty/unallocated
+    cur_pos: jnp.ndarray,  # (B,) position of the current token
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, KV) int8-mode absmax scales
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Block-table-indirected decode attention: gather the slot's logical
+    view from the pool, then delegate to :func:`decode_attention` unchanged.
+
+    Rows gathered from unallocated blocks (clamped to pool row 0) carry
+    ``kv_pos == -1``; the NEG mask turns them into *exact* zeros after the
+    softmax (exp underflows to 0.0, and 0.0 * finite == 0.0), so the output
+    is bitwise identical to a contiguous arena holding the same live rows —
+    the indirection cost is one gather per layer, not a different kernel.
+    """
+    kc = paged_gather(k_pool, rows)
+    vc = paged_gather(v_pool, rows)
+    ks = paged_gather(k_scale, rows) if k_scale is not None else None
+    vs = paged_gather(v_scale, rows) if v_scale is not None else None
+    return decode_attention(q, kc, vc, kv_pos, cur_pos, window,
+                            k_scale=ks, v_scale=vs)
+
+
+def paged_verify_attention(
+    q: jnp.ndarray,  # (B, W, H, dh) — RoPE'd queries for W fed tokens
+    k_pool: jnp.ndarray,  # (P, KV, dh) — incl. the W freshly written rows
+    v_pool: jnp.ndarray,  # (P, KV, dh)
+    rows: jnp.ndarray,  # (B, Sc) block-table row map
+    kv_pos: jnp.ndarray,  # (B, Sc) absolute positions, -1 = empty
+    q_pos: jnp.ndarray,  # (B, W) absolute position of each fed token
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, KV)
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Block-table-indirected :func:`verify_attention` — same gather-then-
+    delegate construction (and the same bitwise-parity argument) as
+    :func:`paged_decode_attention`, for the speculative verify pass."""
+    kc = paged_gather(k_pool, rows)
+    vc = paged_gather(v_pool, rows)
+    ks = paged_gather(k_scale, rows) if k_scale is not None else None
+    vs = paged_gather(v_scale, rows) if v_scale is not None else None
+    return verify_attention(q, kc, vc, kv_pos, q_pos, window,
+                            k_scale=ks, v_scale=vs)

@@ -471,6 +471,23 @@ def verify_window(params, cache: KVCache, tokens, cfg: TransformerConfig):
     return greedy, new_cache
 
 
+def _accept_prefix(greedy, tokens, room, w: int, eos_id):
+    """Greedy-exact acceptance shared by the contiguous and paged verify
+    steps: position 0 always accepts; draft *i* accepts iff it equals the
+    accepted output at *i-1*; ``room`` caps the prefix and ``eos_id``
+    truncates it just past the first EOS.  Returns (accepted, cur_tok)."""
+    match = (tokens[:, 1:] == greedy[:, :-1]).astype(jnp.int32)  # (B, W-1)
+    raw = 1 + jnp.cumprod(match, axis=1).sum(axis=1)  # (B,) in [1, W]
+    accepted = jnp.minimum(raw, jnp.maximum(room, 1))
+    if eos_id is not None:
+        idx = jnp.arange(w, dtype=jnp.int32)[None, :]
+        is_eos = (greedy == eos_id) & (idx < accepted[:, None])
+        first_eos = jnp.min(jnp.where(is_eos, idx, w), axis=1)
+        accepted = jnp.minimum(accepted, first_eos + 1)
+    cur_tok = jnp.take_along_axis(greedy, (accepted - 1)[:, None], axis=1)[:, 0]
+    return accepted, cur_tok
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "eos_id"))
 def verify_step(params, cache: KVCache, tokens, room,
                 cfg: TransformerConfig, eos_id=None):
@@ -494,16 +511,344 @@ def verify_step(params, cache: KVCache, tokens, room,
     """
     b, w = tokens.shape
     greedy, cache = verify_window(params, cache, tokens, cfg)
-    match = (tokens[:, 1:] == greedy[:, :-1]).astype(jnp.int32)  # (B, W-1)
-    raw = 1 + jnp.cumprod(match, axis=1).sum(axis=1)  # (B,) in [1, W]
-    accepted = jnp.minimum(raw, jnp.maximum(room, 1))
-    if eos_id is not None:
-        idx = jnp.arange(w, dtype=jnp.int32)[None, :]
-        is_eos = (greedy == eos_id) & (idx < accepted[:, None])
-        first_eos = jnp.min(jnp.where(is_eos, idx, w), axis=1)
-        accepted = jnp.minimum(accepted, first_eos + 1)
-    cur_tok = jnp.take_along_axis(greedy, (accepted - 1)[:, None], axis=1)[:, 0]
+    accepted, cur_tok = _accept_prefix(greedy, tokens, room, w, eos_id)
     cache = KVCache(k=cache.k, v=cache.v, pos=cache.pos,
                     cursor=cache.cursor + accepted,
                     k_scale=cache.k_scale, v_scale=cache.v_scale)
+    return greedy, accepted, cur_tok, cache
+
+
+# --------------------------------------------------------------------------
+# paged KV pool: block-table indirection over a shared block arena
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PagedKVCache:
+    """KV arena as a pool of fixed-size blocks shared by every decode slot.
+
+    Same logical semantics as :class:`KVCache` — ``pos`` / ``cursor`` keep
+    the per-slot absolute-position view over a virtual (B, Sc) arena — but
+    the physical rows live in a (L, P, KV, dh) pool of ``pool_blocks``
+    blocks of ``block_size`` tokens each (P = pool_blocks * block_size).
+    ``table[b, j]`` names the pool block backing logical positions
+    [j*bs, (j+1)*bs) of slot b; -1 = unallocated.  Allocated entries always
+    form a prefix of the row because positions only grow until the slot
+    retires and frees everything at once.
+
+    ``free`` is a device free-list stack whose valid entries are
+    ``free[:n_free]``: the jitted step pops blocks from the top as cursors
+    cross block boundaries, :func:`free_slot_blocks` pushes a retired
+    slot's blocks back in one small dispatch.  Neither direction syncs the
+    host; the serving engine replays the same arithmetic on host mirrors
+    (cursor → blocks needed → stack depth), so pool-exhaustion checks are
+    host-only and deterministic.
+    """
+
+    k: jnp.ndarray  # (L, P, KV, dh) — int8 when quantized
+    v: jnp.ndarray  # (L, P, KV, dh)
+    pos: jnp.ndarray  # (B, Sc) absolute position per logical row, -1 empty
+    cursor: jnp.ndarray  # (B,) next absolute position to write
+    table: jnp.ndarray  # (B, max_blocks) pool block per logical block, -1 none
+    free: jnp.ndarray  # (pool_blocks,) free-list stack storage
+    n_free: jnp.ndarray  # () int32 valid stack depth
+    k_scale: object = None  # (L, P, KV) bf16 absmax scales (int8 mode)
+    v_scale: object = None
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache,
+    data_fields=["k", "v", "pos", "cursor", "table", "free", "n_free",
+                 "k_scale", "v_scale"],
+    meta_fields=[],
+)
+
+
+def init_paged_cache(cfg: TransformerConfig, batch: int, cache_len: int,
+                     block_size: int, pool_blocks: int) -> PagedKVCache:
+    if cache_len % block_size != 0:
+        raise ValueError(
+            f"block_size={block_size} must divide cache_len={cache_len}"
+        )
+    dtype = jnp.dtype(cfg.dtype)
+    p = pool_blocks * block_size
+    m = cache_len // block_size
+    shape = (cfg.n_layers, p, cfg.n_kv_heads, cfg.d_head)
+    kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+    scales = (jnp.zeros(shape[:-1], jnp.bfloat16) if cfg.kv_quant else None)
+    return PagedKVCache(
+        k=jnp.zeros(shape, kv_dtype),
+        v=jnp.zeros(shape, kv_dtype),
+        pos=jnp.full((batch, cache_len), -1, jnp.int32),
+        cursor=jnp.zeros((batch,), jnp.int32),
+        table=jnp.full((batch, m), -1, jnp.int32),
+        free=jnp.arange(pool_blocks, dtype=jnp.int32),
+        n_free=jnp.asarray(pool_blocks, jnp.int32),
+        k_scale=scales,
+        v_scale=(None if scales is None else scales),
+    )
+
+
+def block_rows(table: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """(B, M) block table -> (B, M*bs) pool-row gather map.  Rows under
+    unallocated blocks map to pool row 0 — callers mask those logical rows
+    via ``pos == -1``, so the gathered garbage is exact zero-weight."""
+    b, m = table.shape
+    off = jnp.arange(block_size, dtype=jnp.int32)
+    rows = table[:, :, None] * block_size + off[None, None, :]
+    return jnp.where(rows >= 0, rows, 0).reshape(b, m * block_size)
+
+
+def alloc_blocks(table, free, n_free, target, live, max_new: int):
+    """Grow each live slot's allocated-block prefix to ``target[b]`` blocks
+    by popping from the free stack — at most ``max_new`` new blocks per slot
+    (a static bound, so the pop unrolls to ``max_new`` masked writes).
+
+    The caller guarantees ``sum(need) <= n_free``: the serving engine
+    retires slots host-side (``truncated=True``) before dispatch whenever
+    the pool cannot cover the step, so no in-jit exhaustion handling — and
+    no host sync — is ever needed.  Dead slots (``~live``) never allocate,
+    even though their cursors drift between admissions.
+    """
+    b, m = table.shape
+    n_tab = jnp.sum(table >= 0, axis=1).astype(jnp.int32)
+    need = jnp.where(live, jnp.clip(target - n_tab, 0, max_new), 0)
+    offs = (jnp.cumsum(need) - need).astype(jnp.int32)  # exclusive prefix sum
+    cols = jnp.arange(m, dtype=jnp.int32)[None, :]
+    for j in range(max_new):
+        take = j < need  # (B,)
+        src = jnp.clip(n_free - 1 - offs - j, 0, free.shape[0] - 1)
+        blk = free[src]  # (B,) popped block ids (garbage where ~take)
+        write = take[:, None] & (cols == (n_tab + j)[:, None])
+        table = jnp.where(write, blk[:, None], table)
+    return table, (n_free - jnp.sum(need)).astype(jnp.int32)
+
+
+@jax.jit
+def free_slot_blocks(cache: PagedKVCache, mask) -> PagedKVCache:
+    """Push every masked slot's blocks back onto the free stack and clear
+    its table/pos/cursor — ONE small dispatch per retirement step, batched
+    over however many slots finished together."""
+    table = cache.table
+    valid = (mask[:, None] & (table >= 0)).reshape(-1)
+    ids = table.reshape(-1)
+    npush = jnp.cumsum(valid.astype(jnp.int32))
+    dst = jnp.where(valid, cache.n_free + npush - 1, cache.free.shape[0])
+    return dataclasses.replace(
+        cache,
+        free=cache.free.at[dst].set(ids, mode="drop"),
+        n_free=(cache.n_free + npush[-1]).astype(jnp.int32),
+        table=jnp.where(mask[:, None], -1, table),
+        pos=jnp.where(mask[:, None], -1, cache.pos),
+        cursor=jnp.where(mask, 0, cache.cursor),
+    )
+
+
+def paged_decode_step(params, cache: PagedKVCache, token, live,
+                      cfg: TransformerConfig, block_size: int):
+    """One decode step over the paged pool — same logical semantics (and
+    bitwise-identical outputs for live slots) as :func:`decode_step` on a
+    contiguous arena.
+
+    The (B, Sc) per-slot view that the attention consumes is gathered from
+    the pool through the block table
+    (:func:`repro.models.transformer.attention.paged_decode_attention`);
+    rows under unallocated blocks carry ``pos == -1`` and the masked
+    softmax zeroes them exactly, so the attention math cannot tell the two
+    layouts apart.  ``live`` (B,) gates allocation and writes: a dead
+    slot's cursor drifts between admissions exactly as it does on the
+    contiguous arena, but it never pops a free block or scatters a row.
+    """
+    b = token.shape[0]
+    sc = cache.pos.shape[1]
+    p_rows = cache.k.shape[1]
+    bs = block_size
+    m = cache.table.shape[1]
+    cur = cache.cursor  # (B,) position of the token being processed
+    # allocate the block holding position `cur` (at most 1 new per step)
+    target = jnp.where(live, cur // bs + 1, 0)
+    table, n_free = alloc_blocks(
+        cache.table, cache.free, cache.n_free, target, live, 1
+    )
+    rows = block_rows(table, bs)  # (B, Sc)
+    ent = jnp.take_along_axis(
+        table, jnp.clip(cur // bs, 0, m - 1)[:, None], axis=1
+    )[:, 0]
+    ok_w = live & (ent >= 0) & (cur < sc)
+    # out-of-range destination == dropped write: dead/over-arena slots
+    # scatter nowhere, deterministically
+    wrow = jnp.where(ok_w, ent * bs + cur % bs, p_rows)
+    slot_mask = (jnp.arange(sc, dtype=jnp.int32)[None, :] == cur[:, None]) \
+        & live[:, None]  # live slots never wrap: cur < sc by retirement
+    x = params["embed"][token][:, None]  # (B, 1, D)
+    quant = cfg.kv_quant
+
+    def body(x, inputs):
+        p, kc, vc, ks, vs = inputs  # kc/vc (P, KV, dh) — this layer's pool
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _attn_proj(p, xn, cfg)
+        q = attn.rope(q, cur[:, None], cfg.rope_theta)
+        k = attn.rope(k, cur[:, None], cfg.rope_theta)
+        if quant:
+            kq, ksc = _quant_rows(k)
+            vq, vsc = _quant_rows(v)
+            kc = kc.at[wrow].set(kq[:, 0], mode="drop")
+            vc = vc.at[wrow].set(vq[:, 0], mode="drop")
+            ks = ks.at[wrow].set(ksc[:, 0], mode="drop")
+            vs = vs.at[wrow].set(vsc[:, 0], mode="drop")
+        else:
+            kc = kc.at[wrow].set(k[:, 0], mode="drop")
+            vc = vc.at[wrow].set(v[:, 0], mode="drop")
+        pos = jnp.where(slot_mask, cur[:, None], cache.pos)
+        o = attn.paged_decode_attention(
+            q, kc, vc, rows, pos, cur, cfg.sliding_window,
+            k_scale=ks, v_scale=vs,
+        )
+        x = x + (o.reshape(b, 1, -1) @ p["wo"]).astype(x.dtype)
+        xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = (jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])) @ p["w2"]
+        else:
+            y, _ = moe_ffn(p["moe"], xn.reshape(b, -1), cfg.moe)
+            y = y[:, None]
+        return x + y.astype(x.dtype), (kc, vc, ks, vs)
+
+    xs = (params["layers"], cache.k, cache.v, cache.k_scale, cache.v_scale)
+    if cfg.scan_layers:
+        x, (kc, vc, ks, vs) = jax.lax.scan(body, x, xs)
+    else:  # unrolled (cost-analysis variants)
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            x, o_i = body(x, sl)
+            outs.append(o_i)
+        cols = list(zip(*outs))
+        kc, vc = jnp.stack(cols[0]), jnp.stack(cols[1])
+        ks = jnp.stack(cols[2]) if quant else None
+        vs = jnp.stack(cols[3]) if quant else None
+    new_pos = jnp.where(slot_mask, cur[:, None], cache.pos)
+    new_cache = PagedKVCache(k=kc, v=vc, pos=new_pos, cursor=cur + 1,
+                             table=table, free=cache.free, n_free=n_free,
+                             k_scale=ks, v_scale=vs)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x[:, 0].astype(jnp.float32) @ params["head"].astype(jnp.float32)
+    return logits, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_size"))
+def paged_serve_step(params, cache: PagedKVCache, token, live,
+                     cfg: TransformerConfig, block_size: int):
+    """Greedy paged decode step — :func:`serve_step` over the block pool."""
+    logits, cache = paged_decode_step(params, cache, token, live, cfg,
+                                      block_size)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def paged_verify_window(params, cache: PagedKVCache, tokens, live,
+                        cfg: TransformerConfig, block_size: int):
+    """:func:`verify_window` over the paged pool: allocate the blocks the
+    W-token window crosses, scatter all W rows, score every position under
+    the same per-position visibility mask.  Values written and the gathered
+    per-slot view are identical to the contiguous merge, so greedy outputs
+    are bitwise identical.  Returns (greedy (B, W), cache) with an
+    UNCHANGED cursor — :func:`paged_verify_step` advances it by the
+    accepted count, leaving rejected rows in place exactly like the
+    contiguous arena (their ``pos`` exceeds later query positions until
+    overwritten)."""
+    b, w = tokens.shape
+    sc = cache.pos.shape[1]
+    p_rows = cache.k.shape[1]
+    bs = block_size
+    m = cache.table.shape[1]
+    cur = cache.cursor  # (B,)
+    positions = cur[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    writable = (positions < sc) & live[:, None]
+    # a W-window starting anywhere inside a block spans at most
+    # ceil(W/bs) + 1 blocks, so the allocator's static bound stays tiny
+    hi = jnp.minimum(cur + w, sc)
+    target = jnp.where(live, (hi + bs - 1) // bs, 0)
+    max_new = min(m, (w + bs - 1) // bs + 1)
+    table, n_free = alloc_blocks(
+        cache.table, cache.free, cache.n_free, target, live, max_new
+    )
+    rows = block_rows(table, bs)  # (B, Sc)
+    ent = jnp.take_along_axis(
+        table, jnp.clip(positions // bs, 0, m - 1), axis=1
+    )  # (B, W)
+    wrows = jnp.where(writable & (ent >= 0),
+                      ent * bs + positions % bs, p_rows).reshape(-1)  # (B*W,)
+    slot_mask = (jnp.arange(sc, dtype=jnp.int32)[None, None, :]
+                 == jnp.clip(positions, 0, sc - 1)[..., None]) \
+        & writable[..., None]  # (B, W, Sc)
+    x = params["embed"][tokens]  # (B, W, D)
+    new_pos = cache.pos
+    for i in range(w):
+        new_pos = jnp.where(slot_mask[:, i], positions[:, i:i + 1], new_pos)
+    quant = cfg.kv_quant
+
+    def body(x, inputs):
+        p, kc, vc, ks, vs = inputs  # kc/vc (P, KV, dh)
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _attn_proj(p, xn, cfg)
+        q = attn.rope(q, positions, cfg.rope_theta)
+        k = attn.rope(k, positions, cfg.rope_theta)
+        if quant:
+            kq, ksc = _quant_rows(k)
+            vq, vsc = _quant_rows(v)
+            kc = kc.at[wrows].set(kq.reshape(b * w, -1, kq.shape[-1]),
+                                  mode="drop")
+            vc = vc.at[wrows].set(vq.reshape(b * w, -1, vq.shape[-1]),
+                                  mode="drop")
+            ks = ks.at[wrows].set(ksc.reshape(b * w, -1), mode="drop")
+            vs = vs.at[wrows].set(vsc.reshape(b * w, -1), mode="drop")
+        else:
+            kc = kc.at[wrows].set(k.reshape(b * w, -1, k.shape[-1]),
+                                  mode="drop")
+            vc = vc.at[wrows].set(v.reshape(b * w, -1, v.shape[-1]),
+                                  mode="drop")
+        o = attn.paged_verify_attention(
+            q, kc, vc, rows, new_pos, positions, cfg.sliding_window,
+            k_scale=ks, v_scale=vs,
+        )
+        x = x + (o.reshape(b, w, -1) @ p["wo"]).astype(x.dtype)
+        xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = (jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])) @ p["w2"]
+        else:
+            y, _ = moe_ffn(p["moe"], xn.reshape(b * w, -1), cfg.moe)
+            y = y.reshape(b, w, -1)
+        return x + y.astype(x.dtype), (kc, vc, ks, vs)
+
+    xs = (params["layers"], cache.k, cache.v, cache.k_scale, cache.v_scale)
+    if cfg.scan_layers:
+        x, (kc, vc, ks, vs) = jax.lax.scan(body, x, xs)
+    else:  # unrolled (cost-analysis variants)
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            x, o_i = body(x, sl)
+            outs.append(o_i)
+        cols = list(zip(*outs))
+        kc, vc = jnp.stack(cols[0]), jnp.stack(cols[1])
+        ks = jnp.stack(cols[2]) if quant else None
+        vs = jnp.stack(cols[3]) if quant else None
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, W)
+    new_cache = PagedKVCache(k=kc, v=vc, pos=new_pos, cursor=cache.cursor,
+                             table=table, free=cache.free, n_free=n_free,
+                             k_scale=ks, v_scale=vs)
+    return greedy, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "eos_id", "block_size"))
+def paged_verify_step(params, cache: PagedKVCache, tokens, room, live,
+                      cfg: TransformerConfig, eos_id=None, *,
+                      block_size: int):
+    """:func:`verify_step` over the paged pool: verify W fed tokens, accept
+    the greedy-matching prefix (same :func:`_accept_prefix` arithmetic, so
+    acceptance is bitwise identical), advance the cursor past it."""
+    b, w = tokens.shape
+    greedy, cache = paged_verify_window(params, cache, tokens, live, cfg,
+                                        block_size)
+    accepted, cur_tok = _accept_prefix(greedy, tokens, room, w, eos_id)
+    cache = dataclasses.replace(cache, cursor=cache.cursor + accepted)
     return greedy, accepted, cur_tok, cache

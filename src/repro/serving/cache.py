@@ -164,7 +164,18 @@ class RetrievalCache:
             return
         now = self._now()
         k = self.key(query_emb)
-        self._data[k] = _Slot(entry=entry, inserted_at=now)
+        prev = self._data.get(k)
+        if prev is not None:
+            # re-insert of a live key (e.g. prefetch.py re-publishing an
+            # owner-computed entry the owner's own eviction raced away):
+            # keep the accumulated ``hits`` so a warm lfu entry does not
+            # become the next eviction victim.  ``inserted_at`` DOES
+            # refresh — a re-insert carries fresh data, so its TTL window
+            # restarts (and ttl-policy eviction treats it as newest).
+            self._data[k] = _Slot(entry=entry, inserted_at=now,
+                                  hits=prev.hits)
+        else:
+            self._data[k] = _Slot(entry=entry, inserted_at=now)
         self._data.move_to_end(k)
         if len(self._data) > self.capacity:
             self._purge_expired(now)

@@ -55,10 +55,27 @@ def env_flag(name: str) -> bool:
 
 
 def _draft_window_default() -> int:
+    """``RGL_DRAFT_WINDOW`` env default.  The raw value is returned
+    unclamped — the constructor applies the same ``>= 2`` validation to the
+    env path as to an explicit ``draft_window=`` argument, so an invalid
+    setting fails loudly instead of being silently rewritten."""
+    raw = os.environ.get("RGL_DRAFT_WINDOW", "4")
     try:
-        return max(2, int(os.environ.get("RGL_DRAFT_WINDOW", "4")))
+        return int(raw)
     except ValueError:
-        return 4
+        raise ValueError(
+            f"RGL_DRAFT_WINDOW={raw!r} is not an integer"
+        ) from None
+
+
+def _auto_block_size(cache_len: int, preferred: int = 16) -> int:
+    """Largest block size <= ``preferred`` dividing ``cache_len``, so the
+    RGL_PAGED_KV env toggle works for any arena length without per-caller
+    block-size plumbing."""
+    for b in range(min(preferred, cache_len), 0, -1):
+        if cache_len % b == 0:
+            return b
+    return 1
 
 
 @dataclasses.dataclass
@@ -68,6 +85,9 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # retired early by KV exhaustion (arena full, or paged pool empty):
+    # out_tokens is shorter than max_new_tokens and did not end at EOS
+    truncated: bool = False
     # monotonic admission ticket assigned by the submitting front-end; a
     # stable identity that, unlike id(self), is never reused after GC
     ticket: int = -1
@@ -159,6 +179,81 @@ def _merge_admitted(arena: tm.KVCache, new: tm.KVCache, cur_tok, first,
     return cache, jnp.where(newly, first[rows], cur_tok)
 
 
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def _paged_merge_admitted(arena: "tm.PagedKVCache", new: tm.KVCache, cur_tok,
+                          first, rows, newly, tl, block_size: int):
+    """Paged-arena admission merge: allocate each admitted slot's prompt
+    blocks (ceil(L/bs)) from the free stack and scatter its freshly
+    prefilled rows into the pool.  ``tl`` (B,) is the per-SLOT prompt
+    length (0 where not admitting); pos/cursor/cur_tok merge with the same
+    semantics as :func:`_merge_admitted`."""
+    bs = block_size
+    b, sc = arena.pos.shape
+    p_rows = arena.k.shape[1]
+    m = arena.table.shape[1]
+    target = jnp.where(newly, (tl + bs - 1) // bs, 0)
+    table, n_free = tm.alloc_blocks(
+        arena.table, arena.free, arena.n_free, target, newly, m
+    )
+    rowmap = tm.block_rows(table, bs)  # (B, Sc)
+    spos = jnp.arange(sc, dtype=jnp.int32)[None, :]
+    # scatter every row of the allocated blocks (zero-padding past the
+    # prompt included — pos == -1 masks it, same as the contiguous merge);
+    # rows past the allocation go out of range and drop
+    valid = newly[:, None] & (spos < target[:, None] * bs)
+    dst = jnp.where(valid, rowmap, p_rows).reshape(-1)  # (B*Sc,)
+
+    def scat(pool, fresh):  # fresh (L, B, Sc, ...) -> pool (L, P, ...)
+        if pool is None:
+            return None
+        vals = fresh[:, rows].reshape(
+            (fresh.shape[0], b * sc) + fresh.shape[3:]
+        )
+        return pool.at[:, dst].set(vals, mode="drop")
+
+    pos_new = jnp.where(spos < tl[:, None], spos, -1)
+    cache = tm.PagedKVCache(
+        k=scat(arena.k, new.k),
+        v=scat(arena.v, new.v),
+        pos=jnp.where(newly[:, None], pos_new, arena.pos),
+        cursor=jnp.where(newly, tl.astype(jnp.int32), arena.cursor),
+        table=table,
+        free=arena.free,
+        n_free=n_free,
+        k_scale=scat(arena.k_scale, new.k_scale),
+        v_scale=scat(arena.v_scale, new.v_scale),
+    )
+    return cache, jnp.where(newly, first[rows], cur_tok)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "n_draft", "eos_id", "block_size")
+)
+def _paged_spec_step(params, cache, cur_tok, hist, hist_len, max_new,
+                     out_len, live, cfg: TransformerConfig, n_draft: int,
+                     eos_id, block_size: int):
+    """:func:`_spec_step` over the paged pool: identical draft / room /
+    acceptance / history arithmetic (so outputs stay bitwise identical to
+    the contiguous arena), with ``live`` gating the pool allocator and the
+    block scatters inside :func:`tm.paged_verify_step`."""
+    drafts = draft_tokens(hist, hist_len, n_draft)
+    fed = jnp.concatenate([cur_tok[:, None], drafts], axis=1)
+    sc = cache.pos.shape[1]
+    room = jnp.minimum(max_new - out_len, sc - cache.cursor).astype(jnp.int32)
+    greedy, accepted, nxt, cache = tm.paged_verify_step(
+        params, cache, fed, room, live, cfg, eos_id=eos_id,
+        block_size=block_size,
+    )
+    h = hist.shape[1]
+    cols = jnp.arange(h, dtype=jnp.int32)[None, :]
+    for i in range(n_draft + 1):
+        write = (i < accepted)[:, None] & (cols == (hist_len + i)[:, None])
+        hist = jnp.where(write, greedy[:, i:i + 1], hist)
+    hist_len = jnp.minimum(hist_len + accepted, h)
+    packed = jnp.concatenate([greedy, accepted[:, None]], axis=1)
+    return packed, nxt, cache, hist, hist_len, out_len + accepted
+
+
 class ServeEngine:
     """Continuous-batching decode server over a fixed KV arena.
 
@@ -170,12 +265,32 @@ class ServeEngine:
 
     ``spec_decode=None`` reads the ``RGL_SPEC_DECODE`` env var (default
     off); ``draft_window`` defaults to ``RGL_DRAFT_WINDOW`` (4).
+
+    ``paged_kv=None`` reads ``RGL_PAGED_KV`` (default off: contiguous
+    arena).  When paged, the KV arena is a shared pool of
+    ``pool_blocks`` blocks of ``block_size`` tokens
+    (:class:`repro.models.transformer.model.PagedKVCache`): a slot only
+    holds blocks its cursor has actually crossed, and returns them the
+    step its request retires, so total KV memory tracks *live tokens*
+    instead of ``slots * cache_len``.  Outputs are bitwise identical to
+    the contiguous arena in both decode modes.  ``block_size=None`` picks
+    the largest divisor of ``cache_len`` <= 16 (override via arg or
+    ``RGL_KV_BLOCK``); ``pool_blocks=None`` sizes the pool to full
+    capacity (``slots * cache_len / block_size`` — never truncates).  An
+    undersized pool is the memory-saving mode: admission gates on block
+    availability (FIFO — an oversized head-of-line request blocks the
+    queue rather than being skipped), and when live slots outgrow the
+    pool mid-decode the engine retires the highest-indexed needy slot
+    with ``truncated=True`` *before* the dispatch, so the in-jit
+    allocator never over-pops and never needs a host sync.
     """
 
     def __init__(
         self, params, cfg: TransformerConfig, *, slots: int = 8,
         cache_len: int = 512, eos_id: Optional[int] = None,
         spec_decode: Optional[bool] = None, draft_window: Optional[int] = None,
+        paged_kv: Optional[bool] = None, block_size: Optional[int] = None,
+        pool_blocks: Optional[int] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -193,9 +308,43 @@ class ServeEngine:
             )
         self.queue: deque = deque()
         self.active: list = [None] * slots
-        self.cache = tm.init_cache(cfg, slots, cache_len)
-        self.cur_tok = jnp.zeros((slots,), jnp.int32)
         self.live = np.zeros(slots, bool)
+        self.paged_kv = env_flag("RGL_PAGED_KV") if paged_kv is None \
+            else bool(paged_kv)
+        self.truncations = 0  # requests retired by KV exhaustion (both modes)
+        if block_size is None:
+            env_bs = os.environ.get("RGL_KV_BLOCK", "")
+            block_size = int(env_bs) if env_bs else None
+        if self.paged_kv:
+            bs = _auto_block_size(cache_len) if block_size is None \
+                else int(block_size)
+            if bs < 1 or cache_len % bs != 0:
+                raise ValueError(
+                    f"block_size={bs} must divide cache_len={cache_len}"
+                )
+            self.block_size = bs
+            self.max_blocks = cache_len // bs
+            self.pool_blocks = slots * self.max_blocks if pool_blocks is None \
+                else int(pool_blocks)
+            if self.pool_blocks < self.max_blocks:
+                raise ValueError(
+                    f"pool_blocks={self.pool_blocks} cannot hold even one "
+                    f"full-length request ({self.max_blocks} blocks)"
+                )
+            self.cache = tm.init_paged_cache(
+                cfg, slots, cache_len, bs, self.pool_blocks
+            )
+            # host mirrors of the device allocator state: admission and
+            # every dispatch replay the same block arithmetic the jitted
+            # allocator runs, so exhaustion checks never sync the device
+            self._free_host = self.pool_blocks
+            self._ntab = np.zeros(slots, np.int64)  # allocated blocks/slot
+            self.pool_high_water = 0  # max blocks ever simultaneously held
+            self._live_dev = jnp.asarray(self.live)
+            self._live_dirty = False
+        else:
+            self.cache = tm.init_cache(cfg, slots, cache_len)
+        self.cur_tok = jnp.zeros((slots,), jnp.int32)
         # per-slot token history arena for the prompt-lookup drafter:
         # prompt + every emitted token, left-aligned.  hist_cap bounds the
         # total (prompt < cache_len, decode stops at cursor == cache_len).
@@ -232,6 +381,83 @@ class ServeEngine:
         prefetched wave only when it can actually be admitted)."""
         return max(0, int(self.slots - self.live.sum()) - len(self.queue))
 
+    # -- paged-pool host bookkeeping ------------------------------------------
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.block_size)  # ceil division
+
+    def _live_mask(self):
+        """Device live mask for the paged dispatches, re-uploaded only when
+        liveness changed (H2D upload, never a D2H sync)."""
+        if self._live_dirty:
+            self._live_dev = jnp.asarray(self.live)
+            self._live_dirty = False
+        return self._live_dev
+
+    def _free_slots_paged(self, slot_ids) -> None:
+        """Return the named slots' blocks to the pool: one jitted push onto
+        the device free stack, mirrored on host."""
+        mask = np.zeros(self.slots, bool)
+        mask[list(slot_ids)] = True
+        self.cache = tm.free_slot_blocks(self.cache, jnp.asarray(mask))
+        self._free_host += int(self._ntab[mask].sum())
+        self._ntab[mask] = 0
+        self._live_dirty = True
+
+    def _release_retired(self, live_before: np.ndarray) -> None:
+        """Free the blocks of every slot that retired during this step's
+        finish checks (batched into one dispatch)."""
+        retired = np.where(live_before & ~self.live)[0]
+        if retired.size:
+            self._free_slots_paged(retired.tolist())
+
+    def _paged_step_need(self) -> np.ndarray:
+        """Per-slot blocks the next dispatch's in-jit allocator will pop —
+        the identical arithmetic replayed on the host mirrors (cursor and
+        table-prefix counts advance deterministically, so the two never
+        diverge)."""
+        w = self.draft_window if self.spec_decode else 1
+        need = np.zeros(self.slots, np.int64)
+        for i in range(self.slots):
+            if not self.live[i]:
+                continue
+            hi = min(int(self._cursor[i]) + w, self.cache_len)
+            need[i] = max(self._blocks_for(hi) - int(self._ntab[i]), 0)
+        return need
+
+    def _retire_pool_exhausted(self) -> list:
+        """Host-side pre-dispatch exhaustion check: while the pool cannot
+        cover every live slot's next-step allocation, retire the
+        highest-indexed slot that needs a block (``truncated=True``) and
+        reclaim its blocks.  Deterministic, and it guarantees the jitted
+        allocator never over-pops — the device needs no exhaustion path."""
+        finished = []
+        need = self._paged_step_need()
+        while need.sum() > self._free_host:
+            needy = np.where(need > 0)[0]
+            i = int(needy[-1])
+            req = self.active[i]
+            req.done = True
+            req.truncated = True
+            self.truncations += 1
+            finished.append(req)
+            self.active[i] = None
+            self.live[i] = False
+            self._free_slots_paged([i])
+            need[i] = 0
+        return finished
+
+    def _apply_paged_alloc(self) -> None:
+        """Advance the host allocator mirrors by exactly what the dispatch
+        being issued will pop on device."""
+        need = self._paged_step_need()
+        tot = int(need.sum())
+        if tot:
+            self._ntab += need
+            self._free_host -= tot
+        self.pool_high_water = max(
+            self.pool_high_water, self.pool_blocks - self._free_host
+        )
+
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         if len(req.prompt_ids) >= self.cache_len:
@@ -245,9 +471,28 @@ class ServeEngine:
         """Refill free slots with one masked batched prefill.  Returns the
         requests that finish AT admission (first token hits EOS, or
         ``max_new_tokens == 1``) — they never occupy a live slot, so a
-        request can never emit more than ``max_new_tokens`` tokens."""
+        request can never emit more than ``max_new_tokens`` tokens.
+
+        Paged arena: admission additionally gates on free blocks —
+        ceil((L+1)/bs) per request, prompt plus the first decode write, so
+        an admit is never pool-truncated on its very first step.  FIFO is
+        preserved: a head-of-line request that does not fit blocks the
+        rest of the queue instead of being skipped (full-size pools never
+        gate, keeping admission identical to the contiguous schedule)."""
         free = [i for i in range(self.slots) if not self.live[i]]
-        take = min(len(free), len(self.queue))
+        if self.paged_kv:
+            take = 0
+            budget = self._free_host
+            for r in list(self.queue)[:len(free)]:
+                need = self._blocks_for(
+                    min(len(r.prompt_ids) + 1, self.cache_len)
+                )
+                if need > budget:
+                    break
+                budget -= need
+                take += 1
+        else:
+            take = min(len(free), len(self.queue))
         if take == 0:
             return []
         reqs = [self.queue.popleft() for _ in range(take)]
@@ -269,15 +514,33 @@ class ServeEngine:
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (slots,)
         rows = np.zeros(self.slots, np.int32)
         newly = np.zeros(self.slots, bool)
+        tl_slot = np.zeros(self.slots, np.int32)
         for j, i in enumerate(slot_ids):
             rows[i] = j
             newly[i] = True
-        self.cache, self.cur_tok = _merge_admitted(
-            self.cache, fresh, self.cur_tok, first,
-            jnp.asarray(rows), jnp.asarray(newly),
-        )
+            tl_slot[i] = tl[j]
+        if self.paged_kv:
+            self.cache, self.cur_tok = _paged_merge_admitted(
+                self.cache, fresh, self.cur_tok, first,
+                jnp.asarray(rows), jnp.asarray(newly), jnp.asarray(tl_slot),
+                self.block_size,
+            )
+            for j, i in enumerate(slot_ids):
+                nb = self._blocks_for(tl[j])
+                self._ntab[i] = nb
+                self._free_host -= nb
+            self.pool_high_water = max(
+                self.pool_high_water, self.pool_blocks - self._free_host
+            )
+            self._live_dirty = True
+        else:
+            self.cache, self.cur_tok = _merge_admitted(
+                self.cache, fresh, self.cur_tok, first,
+                jnp.asarray(rows), jnp.asarray(newly),
+            )
         first_np = np.asarray(first)
         finished = []
+        dead_at_admission = []
         for j, i in enumerate(slot_ids):
             req = reqs[j]
             tok0 = int(first_np[j])
@@ -290,6 +553,7 @@ class ServeEngine:
                 # never goes live, so the next wave simply reuses it
                 req.done = True
                 finished.append(req)
+                dead_at_admission.append(i)
                 continue
             self.active[i] = req
             self.live[i] = True
@@ -299,6 +563,10 @@ class ServeEngine:
             self.hist_len[i] = L + 1
             self._max_new[i] = req.max_new_tokens
             self._out_len[i] = 1
+        if self.paged_kv and dead_at_admission:
+            # admission allocated these slots' prompt blocks, but the slot
+            # never went live — give the blocks straight back
+            self._free_slots_paged(dead_at_admission)
         if self.spec_decode:
             self._hist_dev = jnp.asarray(self.hist)
             self._hist_len_dev = jnp.asarray(self.hist_len)
@@ -316,12 +584,16 @@ class ServeEngine:
     def _finish_check(self, i: int, req: Request, last_tok: int,
                       cursor_i: int, finished: list) -> None:
         hit_eos = self.eos_id is not None and last_tok == self.eos_id
-        full = (
-            len(req.out_tokens) >= req.max_new_tokens
-            or cursor_i >= self.cache_len
-        )
-        if hit_eos or full:
+        budget_full = len(req.out_tokens) >= req.max_new_tokens
+        arena_full = cursor_i >= self.cache_len
+        if hit_eos or budget_full or arena_full:
             req.done = True
+            if arena_full and not (hit_eos or budget_full):
+                # retired by KV exhaustion, not by its own budget or an
+                # EOS: flag it so callers can tell a complete answer from
+                # a clipped one instead of silently receiving fewer tokens
+                req.truncated = True
+                self.truncations += 1
             finished.append(req)
             self.active[i] = None
             self.live[i] = False
@@ -329,6 +601,8 @@ class ServeEngine:
     # -- one decode step for every live slot ----------------------------------
     def step(self) -> list:
         finished = self._admit()
+        if self.paged_kv and self.live.any():
+            finished.extend(self._retire_pool_exhausted())
         if not self.live.any():
             return finished
         if self.spec_decode:
@@ -339,13 +613,21 @@ class ServeEngine:
 
     def _step_one(self) -> list:
         """One-token decode: one jitted dispatch emits one token per slot."""
-        nxt, self.cache = tm.serve_step(
-            self.params, self.cache, self.cur_tok, self.cfg
-        )
+        if self.paged_kv:
+            self._apply_paged_alloc()
+            nxt, self.cache = tm.paged_serve_step(
+                self.params, self.cache, self.cur_tok, self._live_mask(),
+                self.cfg, self.block_size,
+            )
+        else:
+            nxt, self.cache = tm.serve_step(
+                self.params, self.cache, self.cur_tok, self.cfg
+            )
         self.cur_tok = nxt
         self.decode_steps += 1
         self._cursor += 1  # decode_step advances every slot's cursor
         finished = []
+        live_before = self.live.copy()
         toks = np.asarray(nxt)
         for i, req in enumerate(self.active):
             if req is None or not self.live[i]:
@@ -357,6 +639,8 @@ class ServeEngine:
             self.slot_steps += 1
             self._hist_append(i, [t])
             self._finish_check(i, req, t, int(self._cursor[i]), finished)
+        if self.paged_kv:
+            self._release_retired(live_before)
         return finished
 
     def _step_spec(self) -> list:
@@ -370,14 +654,25 @@ class ServeEngine:
         # with whatever stale room their mirrors imply (clamped >= 1, so up
         # to W of drift per step) — harmless: writes stay masked at the
         # arena edge and admission re-pins cursor/mirrors before reuse
-        (packed, self.cur_tok, self.cache, self._hist_dev,
-         self._hist_len_dev, self._out_len_dev) = _spec_step(
-            self.params, self.cache, self.cur_tok, self._hist_dev,
-            self._hist_len_dev, self._max_new_dev, self._out_len_dev,
-            self.cfg, w - 1, self.eos_id,
-        )
+        if self.paged_kv:
+            self._apply_paged_alloc()
+            (packed, self.cur_tok, self.cache, self._hist_dev,
+             self._hist_len_dev, self._out_len_dev) = _paged_spec_step(
+                self.params, self.cache, self.cur_tok, self._hist_dev,
+                self._hist_len_dev, self._max_new_dev, self._out_len_dev,
+                self._live_mask(), self.cfg, w - 1, self.eos_id,
+                self.block_size,
+            )
+        else:
+            (packed, self.cur_tok, self.cache, self._hist_dev,
+             self._hist_len_dev, self._out_len_dev) = _spec_step(
+                self.params, self.cache, self.cur_tok, self._hist_dev,
+                self._hist_len_dev, self._max_new_dev, self._out_len_dev,
+                self.cfg, w - 1, self.eos_id,
+            )
         self.decode_steps += 1
         finished = []
+        live_before = self.live.copy()
         packed_np = np.asarray(packed)  # the step's single host sync
         g_np, acc_np = packed_np[:, :w], packed_np[:, w]
         self._cursor += acc_np  # verify_step advanced every slot by accepted
@@ -396,6 +691,8 @@ class ServeEngine:
             self._hist_append(i, emitted)
             self._finish_check(i, req, emitted[-1], int(self._cursor[i]),
                                finished)
+        if self.paged_kv:
+            self._release_retired(live_before)
         return finished
 
     def decode_stats(self) -> dict:
@@ -404,7 +701,7 @@ class ServeEngine:
         exactly 1.0 in one-token mode, up to ``draft_window`` under
         speculation — i.e. the accepted-tokens/step signal, normalized per
         slot so batch occupancy does not inflate it."""
-        return {
+        stats = {
             "spec_decode": self.spec_decode,
             "draft_window": self.draft_window if self.spec_decode else 1,
             "decode_steps": self.decode_steps,
@@ -417,7 +714,17 @@ class ServeEngine:
                 self.draft_accepted / self.draft_proposed
                 if self.draft_proposed else 0.0
             ),
+            "paged_kv": self.paged_kv,
+            "truncations": self.truncations,
         }
+        if self.paged_kv:
+            stats.update(
+                block_size=self.block_size,
+                pool_blocks=self.pool_blocks,
+                pool_high_water_blocks=self.pool_high_water,
+                pool_free_blocks=self._free_host,
+            )
+        return stats
 
     def run_to_completion(self, max_steps: int = 10_000) -> list:
         """Step until every request drains.  Raises if ``max_steps`` elapse

@@ -214,12 +214,62 @@ class AdmissionPrefetcher:
         return wave
 
     # -- collect --------------------------------------------------------------
+    @staticmethod
+    def _arr_ready(a) -> bool:
+        """True once a device array's computation has finished (so forcing
+        it would not block).  Non-JAX arrays (numpy, simulator stand-ins
+        without the method) are always ready."""
+        is_ready = getattr(a, "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else True
+
+    def _wave_ready(self, wave: PrefetchWave) -> bool:
+        """A wave is collectable without blocking when its retrieval arrays
+        have landed AND every deferred request's owner has already collected
+        (a deferred entry resolves from the owner's ``entries_by_key``,
+        which is empty until then — collecting early would re-dispatch
+        nothing but would mis-account the hit)."""
+        for _, k, owner_entries in wave.deferred:
+            if owner_entries is not None and k not in owner_entries \
+                    and self.cache.is_inflight(k):
+                return False
+        if not wave.has_misses:
+            return True
+        return all(
+            self._arr_ready(a)
+            for a in (wave.sub.nodes, wave.sub.mask, wave.sub.dist, wave.seeds)
+        )
+
+    def ready_index(self) -> Optional[int]:
+        """Index of the oldest in-flight wave that can be collected without
+        blocking (its device arrays are ready and its deferred owners have
+        resolved), or ``None``.  This is the per-request admission hook: a
+        continuous scheduler collects whichever wave is done instead of
+        stalling on FIFO order behind one slow retrieval row."""
+        for i, w in enumerate(self._waves):
+            if self._wave_ready(w):
+                return i
+        return None
+
     def collect(self, *, step: int = 0, tokens: int = 0,
                 sync: bool = False) -> list:
         """Block on the oldest wave and return ``(request, entry)`` pairs in
         arrival order.  ``sync=True`` marks a launch-then-collect-immediately
         schedule: no overlap is accrued (there was no window to hide in)."""
         wave = self._waves.popleft()
+        return self._collect(wave, step=step, tokens=tokens, sync=sync)
+
+    def collect_at(self, index: int, *, step: int = 0,
+                   tokens: int = 0) -> list:
+        """Collect the wave at ``index`` (from :meth:`ready_index`) out of
+        FIFO order.  Safe for any wave — a not-actually-ready wave simply
+        blocks — but deferred consistency is only guaranteed for indices
+        that :meth:`ready_index` returned (owner waves resolve first)."""
+        wave = self._waves[index]
+        del self._waves[index]
+        return self._collect(wave, step=step, tokens=tokens, sync=False)
+
+    def _collect(self, wave: PrefetchWave, *, step: int, tokens: int,
+                 sync: bool) -> list:
         cache = self.cache
         t0 = self._now()
         if not sync and wave.has_misses:

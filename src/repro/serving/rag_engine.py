@@ -27,6 +27,15 @@ inside one engine.  Three amortization mechanisms drive throughput:
   schedules produce bitwise-identical outputs (see
   ``tests/test_async_serving.py``).
 
+Two admission *granularities* sit on top of either schedule
+(``admission=`` / ``RGL_ADMISSION``): classic **wave** admission retrieves
+and admits whole waves, while **continuous** admission launches one
+retrieval per request and — under prefetch — collects whichever request's
+retrieval is ready (``AdmissionPrefetcher.ready_index``), so a single slow
+retrieval row no longer delays its wave-mates and a freed decode slot never
+waits for a wave boundary.  Outputs are bitwise identical across all four
+combinations (greedy decode is schedule-invariant per request).
+
 Generation itself rides the slot-based :class:`~repro.serving.engine.ServeEngine`
 (one jitted decode step for all slots, masked batched prefill admission).
 ``spec_decode`` / ``RGL_SPEC_DECODE=1`` switches the decode arena to
@@ -37,6 +46,7 @@ per dispatch) — see :mod:`repro.serving.engine`.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
 from typing import Optional
 
@@ -56,6 +66,18 @@ def _prefetch_default() -> bool:
     return env_flag("RGL_PREFETCH")
 
 
+def _admission_default() -> str:
+    """``RGL_ADMISSION`` env default ("wave").  Invalid values raise — the
+    two schedules produce identical outputs, so a typo would otherwise run
+    silently in the wrong mode."""
+    raw = os.environ.get("RGL_ADMISSION", "wave").lower()
+    if raw not in ("wave", "continuous"):
+        raise ValueError(
+            f"RGL_ADMISSION={raw!r}: expected 'wave' or 'continuous'"
+        )
+    return raw
+
+
 @dataclasses.dataclass
 class RAGRequest:
     """A raw serving request: query embedding + query text, no tokens yet."""
@@ -69,6 +91,9 @@ class RAGRequest:
     retrieved_nodes: Optional[np.ndarray] = None  # filtered subgraph members
     cache_hit: bool = False
     done: bool = False
+    # retired early by KV exhaustion (contiguous arena full / paged pool
+    # empty): out_tokens is shorter than max_new_tokens with no EOS
+    truncated: bool = False
 
 
 class RAGServeEngine:
@@ -99,9 +124,13 @@ class RAGServeEngine:
         cache_policy: str = "lru",
         cache_ttl: Optional[float] = None,
         prefetch: Optional[bool] = None,
-        prefetch_depth: int = 1,
+        prefetch_depth: Optional[int] = None,
+        admission: Optional[str] = None,
         spec_decode: Optional[bool] = None,
         draft_window: Optional[int] = None,
+        paged_kv: Optional[bool] = None,
+        kv_block_size: Optional[int] = None,
+        kv_pool_blocks: Optional[int] = None,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
@@ -115,14 +144,34 @@ class RAGServeEngine:
         self.engine = ServeEngine(
             params, cfg, slots=slots, cache_len=cache_len, eos_id=eos_id,
             spec_decode=spec_decode, draft_window=draft_window,
+            paged_kv=paged_kv, block_size=kv_block_size,
+            pool_blocks=kv_pool_blocks,
         )
         self.cache = retrieval_cache if retrieval_cache is not None else \
             RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps,
                            policy=cache_policy, ttl=cache_ttl)
         self.prefetch = _prefetch_default() if prefetch is None else \
             bool(prefetch)
+        self.admission = _admission_default() if admission is None else \
+            str(admission).lower()
+        if self.admission not in ("wave", "continuous"):
+            raise ValueError(
+                f"admission={self.admission!r}: expected 'wave' or "
+                f"'continuous'"
+            )
+        if prefetch_depth is None:
+            # continuous admission launches size-1 waves, so the in-flight
+            # window must hold one wave per slot to keep every free slot's
+            # retrieval overlapping; wave admission double-buffers (depth 1)
+            prefetch_depth = slots if self.admission == "continuous" else 1
+        # continuous launches always carry one request, so the retrieval
+        # batch pads to 1 row instead of `slots` — per-row retrieval is
+        # row-independent, so results stay bitwise identical while the
+        # per-dispatch compute stops scaling with the unused padding
         self.prefetcher = AdmissionPrefetcher(
-            pipeline, self.cache, wave_size=slots, depth=prefetch_depth,
+            pipeline, self.cache,
+            wave_size=1 if self.admission == "continuous" else slots,
+            depth=prefetch_depth,
         )
         self.pending: deque = deque()
         self._inflight: dict = {}  # admission ticket -> RAGRequest
@@ -157,9 +206,17 @@ class RAGServeEngine:
     def submit(self, req: RAGRequest) -> None:
         self.pending.append(req)
 
-    def _take_wave(self) -> list:
-        take = min(len(self.pending), self.slots)
+    def _take_wave(self, limit: Optional[int] = None) -> list:
+        cap = self.slots if limit is None else limit
+        take = min(len(self.pending), cap)
         return [self.pending.popleft() for _ in range(take)]
+
+    @property
+    def _launch_unit(self) -> int:
+        """Requests per retrieval launch: a full wave in wave admission, a
+        single request in continuous admission (so one slow retrieval row
+        never blocks the admission of its would-be wave-mates)."""
+        return 1 if self.admission == "continuous" else self.slots
 
     def _tokenize_and_admit(self, resolved: list) -> None:
         """Stage 4+5 handoff: linearize each (request, entry) pair and hand
@@ -181,7 +238,17 @@ class RAGServeEngine:
 
     def _admit_sync(self) -> None:
         """Sync schedule: launch one wave and collect it immediately (the
-        collect's ``np.asarray`` blocks for the full retrieval latency)."""
+        collect's ``np.asarray`` blocks for the full retrieval latency).
+        Continuous admission runs the same blocking launch+collect per
+        *request* instead — one admission unit per free slot."""
+        if self.admission == "continuous":
+            while self.engine.free_slots > 0 and self.pending:
+                reqs = self._take_wave(1)
+                tok = self.engine.emitted_tokens
+                self.prefetcher.launch(reqs, step=self._step_no, tokens=tok)
+                self._tokenize_and_admit(self.prefetcher.collect(
+                    step=self._step_no, tokens=tok, sync=True))
+            return
         reqs = self._take_wave()
         if not reqs:
             return
@@ -193,7 +260,8 @@ class RAGServeEngine:
 
     def _launch_pending(self) -> None:
         while self.pending and self.prefetcher.can_launch():
-            self.prefetcher.launch(self._take_wave(), step=self._step_no,
+            self.prefetcher.launch(self._take_wave(self._launch_unit),
+                                   step=self._step_no,
                                    tokens=self.engine.emitted_tokens)
 
     def _admit_prefetch(self) -> None:
@@ -224,20 +292,54 @@ class RAGServeEngine:
                                         tokens=self.engine.emitted_tokens)
             )
 
+    def _admit_continuous(self) -> None:
+        """Continuous + prefetch: per-request launches, out-of-FIFO collect.
+        Each free slot collects whichever in-flight single-request wave is
+        *ready* (device arrays landed, deferred owners resolved) via
+        ``ready_index``/``collect_at`` — so one slow retrieval row delays
+        only its own request, never its would-be wave-mates.  Launches are
+        sandwiched between collect and tokenize/admit exactly like the wave
+        schedule, keeping the admission overhead inside the next request's
+        overlap window."""
+        self._launch_pending()
+        while self.engine.free_slots > 0 and self.prefetcher.in_flight:
+            idx = self.prefetcher.ready_index()
+            if idx is None:
+                break
+            resolved = self.prefetcher.collect_at(
+                idx, step=self._step_no, tokens=self.engine.emitted_tokens
+            )
+            self._launch_pending()
+            self._tokenize_and_admit(resolved)
+        if (not self.engine.live.any() and not self.engine.queue
+                and self.prefetcher.in_flight):
+            # idle arena with nothing ready: block on the oldest wave rather
+            # than burn empty steps (oldest first keeps deferred owners
+            # resolving before their dependents)
+            self._tokenize_and_admit(
+                self.prefetcher.collect(step=self._step_no,
+                                        tokens=self.engine.emitted_tokens)
+            )
+            self._launch_pending()
+
     # -- stepping -------------------------------------------------------------
     def step(self) -> list:
-        """One engine step: admission (sync or prefetched) + one decode step.
-        Returns the RAG requests that finished this step."""
-        if self.prefetch:
-            self._admit_prefetch()
-        else:
+        """One engine step: admission (sync or prefetched, wave or
+        continuous) + one decode step.  Returns the RAG requests that
+        finished this step."""
+        if not self.prefetch:
             self._admit_sync()
+        elif self.admission == "continuous":
+            self._admit_continuous()
+        else:
+            self._admit_prefetch()
         finished_inner = self.engine.step()
         self._step_no += 1
         out = []
         for inner in finished_inner:
             r = self._inflight.pop(inner.ticket)
             r.out_tokens = inner.out_tokens
+            r.truncated = inner.truncated
             r.done = True
             out.append(r)
         return out
@@ -266,6 +368,7 @@ class RAGServeEngine:
             retrieved_queries=self.retrieved_queries,
             retrieval_seconds=self.retrieval_seconds,
             prefetch=self.prefetch,
+            admission=self.admission,
             **self.prefetcher.stats(),
             **self.engine.decode_stats(),
         )

@@ -55,6 +55,12 @@ class LazyHostArray:
         a = self._data
         return a.astype(dtype) if dtype is not None else a
 
+    def is_ready(self) -> bool:
+        """Same contract as ``jax.Array.is_ready``: True once forcing would
+        not block.  This is what lets ``AdmissionPrefetcher.ready_index``
+        skip past a still-computing wave in continuous admission."""
+        return self._now() >= self._ready_at
+
 
 @dataclasses.dataclass
 class _LazySubgraph:
@@ -72,13 +78,23 @@ class DelayedRetrieval:
     returned arrays only become forceable ``cost_s`` seconds after dispatch.
     ``events`` receives ``("launch", t)`` per dispatch and ``("force", t)``
     on the first field forced per wave.
+
+    ``cost_fn`` (optional) prices each *row*: it maps one query embedding to
+    that row's retrieval cost in seconds, and the wave's deadline is the max
+    over its rows — a batched dispatch finishes when its slowest member
+    does.  This is the knob that makes wave admission's head-of-line
+    blocking measurable: one expensive row holds every wave-mate's
+    admission, while continuous (per-request) admission pays it on that
+    request alone.  When ``cost_fn`` is None every wave costs ``cost_s``.
     """
 
     def __init__(self, inner, cost_s: float,
-                 events: Optional[list] = None):
+                 events: Optional[list] = None,
+                 cost_fn: Optional[Callable[[np.ndarray], float]] = None):
         self.inner = inner
         self.cost_s = cost_s
         self.events = events
+        self.cost_fn = cost_fn
         self.dispatches = 0
 
     def __getattr__(self, name):
@@ -92,7 +108,12 @@ class DelayedRetrieval:
         now = time.perf_counter()
         if self.events is not None:
             self.events.append(("launch", now))
-        ready_at = now + self.cost_s
+        if self.cost_fn is not None:
+            qe = np.asarray(query_embs)
+            cost = max((float(self.cost_fn(row)) for row in qe), default=0.0)
+        else:
+            cost = self.cost_s
+        ready_at = now + cost
         # force the real device arrays NOW (the tiny graph's true cost is
         # negligible) and re-wrap as host arrays gated on the deadline
         lazy = _LazySubgraph(

@@ -279,6 +279,40 @@ def test_cache_lfu_eviction():
     assert cache.evictions == 2
 
 
+def test_cache_reinsert_preserves_hits_under_lfu():
+    """Re-putting a live key must keep its accumulated hit count: a warm
+    lfu entry re-inserted (e.g. prefetch.py re-publishing an owner wave's
+    result after the owner's copy was evicted) used to restart at 0 hits
+    and become the next eviction victim."""
+    cache = RetrievalCache(capacity=2, policy="lfu")
+    cache.put(_emb(0), _entry(0))
+    cache.put(_emb(1), _entry(1))
+    for _ in range(3):
+        assert cache.get(_emb(0)) is not None  # e0: warm, 3 hits
+    assert cache.get(_emb(1)) is not None  # e1: 1 hit
+    cache.put(_emb(0), _entry(0))  # re-insert the warm key
+    assert cache.hit_count(_emb(0)) == 3  # hits survive the re-insert
+    cache.put(_emb(2), _entry(2))  # must evict e1 (1 hit), NOT warm e0
+    assert cache.get(_emb(0)) is not None
+    assert cache.get(_emb(1)) is None
+    assert cache.evictions == 1
+
+
+def test_cache_reinsert_refreshes_ttl_window():
+    """inserted_at DOES refresh on re-insert (documented): a re-put carries
+    fresh data, so its TTL expiry window restarts."""
+    clock = {"t": 0.0}
+    cache = RetrievalCache(capacity=4, policy="ttl", ttl=10.0,
+                           now_fn=lambda: clock["t"])
+    cache.put(_emb(0), _entry(0))
+    clock["t"] = 8.0
+    cache.put(_emb(0), _entry(0))  # re-insert at t=8 restarts the window
+    clock["t"] = 15.0  # 15 > 0+10 but < 8+10: alive only if refreshed
+    assert cache.get(_emb(0)) is not None
+    clock["t"] = 18.1
+    assert cache.get(_emb(0)) is None  # 18.1 > 8+10: expires on schedule
+
+
 def test_cache_ttl_expiry_and_fifo_eviction():
     clock = {"t": 0.0}
     cache = RetrievalCache(capacity=2, policy="ttl", ttl=10.0,

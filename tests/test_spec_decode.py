@@ -347,6 +347,24 @@ def test_spec_env_default_and_override(monkeypatch):
         make(spec_decode=True, draft_window=1)
 
 
+def test_draft_window_env_raises_like_constructor(monkeypatch):
+    """RGL_DRAFT_WINDOW=1 must fail exactly like draft_window=1 — it used
+    to be silently clamped to 2, so the same invalid input had two
+    behaviors depending on which path set it."""
+    def make(**kw):
+        return ServeEngine(PARAMS, CFG, slots=1, cache_len=32, **kw)
+
+    monkeypatch.setenv("RGL_DRAFT_WINDOW", "1")
+    with pytest.raises(ValueError, match="draft_window"):
+        make(spec_decode=True)
+    # non-speculative engines never validate the window (parity with the
+    # constructor path, where draft_window=1 is fine if spec is off)
+    assert make(spec_decode=False).draft_window == 1
+    monkeypatch.setenv("RGL_DRAFT_WINDOW", "banana")
+    with pytest.raises(ValueError, match="RGL_DRAFT_WINDOW"):
+        make(spec_decode=True)
+
+
 def test_acceptance_telemetry_on_repetitive_stream():
     """A strongly cyclic stream must commit >1 token per slot-step and
     account drafts consistently."""
