@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * paged_kv            — paged-arena indirection overhead + wave vs
                           continuous admission on a skewed request mix
                           (also writes BENCH_paged_kv.json)
+  * fault_tolerance     — goodput vs injected retrieval-fault rate, with
+                          and without retries + the degradation ladder
+                          (also writes BENCH_fault_tolerance.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 
@@ -38,6 +41,7 @@ def main() -> None:
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
         "async_serving", "sharding", "scaling", "spec_decode", "paged_kv",
+        "fault_tolerance",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
@@ -55,9 +59,9 @@ def main() -> None:
         return f"BENCH_{name}.smoke.json" if fast else f"BENCH_{name}.json"
 
     from benchmarks import (
-        abstract_generation, async_serving, index_sharding, kernels,
-        modality_completion, paged_kv, rag_serving, retrieval_scaling,
-        spec_decode,
+        abstract_generation, async_serving, fault_tolerance, index_sharding,
+        kernels, modality_completion, paged_kv, rag_serving,
+        retrieval_scaling, spec_decode,
     )
 
     print("name,us_per_call,derived")
@@ -152,6 +156,22 @@ def main() -> None:
               f"residency={ind['kv_residency_frac']:.2f}")
         print(f"paged_kv/skewed_admission,{skew['continuous_s'] * 1e6:.0f},"
               f"continuous_vs_wave={skew['speedup']:.2f}x")
+    if args.only in (None, "fault_tolerance"):
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=8, max_new=6,
+                 fault_rates=(0.0, 0.2), timeout_s=0.1) if smoke else
+            dict(n_nodes=1000, n_requests=12, max_new=8,
+                 fault_rates=(0.0, 0.2, 0.4)))
+        rep = fault_tolerance.run(**kw)
+        fault_tolerance.write_json(rep, bench_path("fault_tolerance"))
+        for row in rep["results"]:
+            res, nai = row["resilient"], row["naive"]
+            print(f"fault_tolerance/rate={row['fault_rate']:.0%},"
+                  f"{res['wall_s'] * 1e6:.0f},"
+                  f"goodput={res['goodput_tok_s']:.1f}tok_s;"
+                  f"ok={res['completed']};failed={res['failed']};"
+                  f"degraded={res['degraded_served']};"
+                  f"naive_ok={nai['completed']}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,9 @@ import numpy as np
 
 from repro import configs as C
 from repro.models.transformer import model as tm
-from repro.serving import RAGRequest, RAGServeEngine, Request, ServeEngine
+from repro.serving import (
+    FaultyRetrieval, RAGRequest, RAGServeEngine, Request, ServeEngine,
+)
 
 
 def _print_decode_stats(ds: dict) -> None:
@@ -93,6 +95,11 @@ def _serve_rag(cfg, args) -> None:
         graph=ell, index=index, node_emb=emb, tokenizer=tok,
         node_text=g.node_text, config=pcfg,
     )
+    if args.fault_rate > 0:
+        # fault-injection demo mode: a seeded fraction of retrieval rows
+        # raise / stall / corrupt, exercising the retry + degradation path
+        pipe = FaultyRetrieval(pipe, seed=args.fault_seed,
+                               fault_rate=args.fault_rate)
     params = tm.init_params(jax.random.PRNGKey(0), cfg)
     # the linearized graph prompt (<= tokenizer max_len) plus generated
     # tokens must fit the arena; sliding_window only bounds attention reach
@@ -107,7 +114,14 @@ def _serve_rag(cfg, args) -> None:
                          draft_window=args.draft_window,
                          paged_kv=args.paged_kv,
                          kv_block_size=args.kv_block,
-                         kv_pool_blocks=args.pool_blocks)
+                         kv_pool_blocks=args.pool_blocks,
+                         retrieval_timeout_s=args.retrieval_timeout,
+                         max_retries=args.retries,
+                         retry_backoff_s=args.retry_backoff,
+                         degraded_mode=args.degraded,
+                         max_pending=args.max_pending,
+                         shed_policy=args.shed_policy,
+                         default_deadline_s=args.deadline)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -118,14 +132,24 @@ def _serve_rag(cfg, args) -> None:
             query_text=" ".join(g.node_text[qi].split()[:4]),
             max_new_tokens=args.max_new,
         ))
-    done = eng.run_to_completion()
+    # drain() never raises: under fault injection (or tight deadlines) the
+    # stragglers are aborted and reported instead of crashing the launcher
+    done = eng.drain()
     dt = time.time() - t0
-    toks = sum(len(r.out_tokens) for r in done)
+    ok = [r for r in done if r.done and not r.failed]
+    toks = sum(len(r.out_tokens) for r in ok)
     s = eng.stats()
-    print(f"[{args.arch}] RAG-served {len(done)} requests / {toks} tokens "
-          f"in {dt:.1f}s ({toks / dt:.1f} tok/s); "
+    print(f"[{args.arch}] RAG-served {len(ok)}/{len(done)} requests / "
+          f"{toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s); "
           f"{s['retrieval_batches']} retrieval batches, "
           f"cache {s['hits']}/{s['hits'] + s['misses']} hits")
+    ft = (s["retries"], s["timeouts"], s["failed"], s["shed"],
+          s["degraded"], s["stale_served"])
+    if any(ft) or args.fault_rate > 0:
+        print(f"  fault tolerance: {s['retries']} retries, "
+              f"{s['timeouts']} timeouts, {s['failed']} failed, "
+              f"{s['shed']} shed, {s['degraded']} degraded-served, "
+              f"{s['stale_served']} stale-served")
     if s["prefetch"]:
         print(f"  prefetch: {s['prefetch_waves']} waves, "
               f"{s['overlap_seconds'] * 1e3:.1f}ms overlapped "
@@ -201,6 +225,41 @@ def main():
     ap.add_argument("--draft-window", type=int, default=None,
                     help="fed tokens per speculative step (1 committed + "
                          "W-1 drafts; default honors RGL_DRAFT_WINDOW, 4)")
+    ap.add_argument("--retrieval-timeout", type=float, default=None,
+                    help="seconds before an unready retrieval wave is "
+                         "declared timed out (default honors "
+                         "RGL_RETRIEVAL_TIMEOUT; unset = wait forever)")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="retry budget for a failed retrieval miss-group "
+                         "(size-1 isolated relaunches; default honors "
+                         "RGL_RETRIES, 0)")
+    ap.add_argument("--retry-backoff", type=float, default=None,
+                    help="base seconds for exponential retry backoff "
+                         "(default honors RGL_RETRY_BACKOFF, 0)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds from submit; "
+                         "expired requests are shed, never dispatched "
+                         "(default honors RGL_DEADLINE; unset = none)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="pending-queue bound; overflow triggers "
+                         "--shed-policy (default honors RGL_MAX_PENDING, "
+                         "0 = unbounded)")
+    ap.add_argument("--shed-policy", default=None,
+                    choices=["reject", "evict-oldest"],
+                    help="overflow victim: reject the new request or evict "
+                         "the oldest pending one (default honors "
+                         "RGL_SHED_POLICY, 'reject')")
+    ap.add_argument("--degraded", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="retrieval-free (query-only) decode when retries "
+                         "and the stale cache are exhausted (--no-degraded "
+                         "fails such requests; default honors RGL_DEGRADED, "
+                         "on)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject seeded retrieval faults on this fraction "
+                         "of query rows (demo/bench mode; 0 = off)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the per-row fault schedule")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch).reduced_cfg

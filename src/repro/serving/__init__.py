@@ -2,12 +2,17 @@ from repro.serving.engine import ServeEngine, Request
 from repro.serving.cache import RetrievalCache, CachedRetrieval
 from repro.serving.prefetch import AdmissionPrefetcher, PrefetchWave
 from repro.serving.rag_engine import RAGServeEngine, RAGRequest
-from repro.serving.simulate import DelayedRetrieval, LazyHostArray
+from repro.serving.simulate import (
+    DelayedRetrieval,
+    FaultyRetrieval,
+    LazyHostArray,
+    RetrievalFault,
+)
 
 __all__ = [
     "ServeEngine", "Request",
     "RetrievalCache", "CachedRetrieval",
     "AdmissionPrefetcher", "PrefetchWave",
     "RAGServeEngine", "RAGRequest",
-    "DelayedRetrieval", "LazyHostArray",
+    "DelayedRetrieval", "FaultyRetrieval", "LazyHostArray", "RetrievalFault",
 ]

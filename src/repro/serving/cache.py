@@ -16,9 +16,14 @@ Eviction policies (capacity pressure):
   naturally with an expiry window.
 
 Independently of the policy, an optional ``ttl`` (seconds) expires entries
-``ttl`` after insertion: an expired entry is dropped at lookup (counted as
-a miss + ``expired``), and ``put`` purges expired entries before falling
-back to policy eviction.
+``ttl`` after insertion: an expired entry is *invisible* to ``get`` (each
+such lookup counts a miss + ``expired``) but stays resident until capacity
+pressure reclaims it — ``put`` purges expired entries before falling back
+to policy eviction.  Keeping the stale bytes around is deliberate: the
+serving engine's graceful-degradation ladder (:mod:`repro.serving.rag_engine`)
+falls back to a stale entry via :meth:`RetrievalCache.peek_stale` when live
+retrieval fails and retries are exhausted — a TTL-expired answer beats no
+answer.
 
 For async admission prefetch the cache also tracks an **in-flight miss
 set**: keys whose retrieval has been dispatched but whose results have not
@@ -129,9 +134,12 @@ class RetrievalCache:
         slot = self._data.get(k)
         now = self._now()
         if slot is not None and self._is_expired(slot, now):
-            del self._data[k]
+            # expired entries are invisible here but stay resident (until a
+            # capacity-pressure purge) so peek_stale can serve them when
+            # live retrieval fails — see the degradation ladder
             self.expired += 1
-            slot = None
+            self.misses += 1
+            return None
         if slot is None:
             self.misses += 1
             return None
@@ -139,6 +147,14 @@ class RetrievalCache:
         slot.hits += 1
         self.hits += 1
         return slot.entry
+
+    def peek_stale(self, query_emb) -> CachedRetrieval | None:
+        """Degraded-mode lookup: return the resident entry for this key even
+        if TTL-expired, without touching hit/miss counters or recency.  The
+        serving engine falls back to this when live retrieval has failed and
+        retries are exhausted (counted there as ``stale_served``)."""
+        slot = self._data.get(self.key(query_emb))
+        return slot.entry if slot is not None else None
 
     def hit_count(self, query_emb) -> int:
         """Per-entry hit count (0 if absent) — the lfu eviction signal."""

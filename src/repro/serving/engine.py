@@ -88,6 +88,10 @@ class Request:
     # retired early by KV exhaustion (arena full, or paged pool empty):
     # out_tokens is shorter than max_new_tokens and did not end at EOS
     truncated: bool = False
+    # retired by ServeEngine.abort(): whatever tokens were emitted so far
+    # are kept, ``error`` carries the abort reason
+    failed: bool = False
+    error: Optional[str] = None
     # monotonic admission ticket assigned by the submitting front-end; a
     # stable identity that, unlike id(self), is never reused after GC
     ticket: int = -1
@@ -466,6 +470,32 @@ class ServeEngine:
                 f"cache_len={self.cache_len} (need room for >=1 new token)"
             )
         self.queue.append(req)
+
+    def abort(self, reason: str = "aborted") -> list:
+        """Retire every queued and live request (``failed=True``, partial
+        ``out_tokens`` kept) and reconcile the arena: slots freed, paged KV
+        blocks returned to the pool, queue cleared.  The engine is reusable
+        afterwards — a fresh workload admits into a clean arena.  Returns
+        the aborted requests."""
+        out = []
+        live_idx = [i for i in range(self.slots) if self.live[i]]
+        for i in live_idx:
+            req = self.active[i]
+            req.done = True
+            req.failed = True
+            req.error = reason
+            self.active[i] = None
+            self.live[i] = False
+            out.append(req)
+        if self.paged_kv and live_idx:
+            self._free_slots_paged(live_idx)
+        while self.queue:
+            req = self.queue.popleft()
+            req.done = True
+            req.failed = True
+            req.error = reason
+            out.append(req)
+        return out
 
     def _admit(self) -> list:
         """Refill free slots with one masked batched prefill.  Returns the

@@ -60,6 +60,31 @@ Telemetry (merged into ``RAGServeEngine.stats()``):
   retrieval was never the bottleneck (either genuinely hidden or simply
   cheap); judge the magnitude of the win from ``collect_block_seconds``
   against the sync schedule's ``retrieval_seconds``.
+
+**Fault tolerance.**  Retrieval is a fallible, variable-latency stage, so
+the collect phase carries a containment layer (all off by default):
+
+* a wave whose arrays are not ready ``retrieval_timeout_s`` after its
+  dispatch is declared timed out instead of blocked on forever;
+* a failed wave — launch raise, force raise, timeout, or a row whose node
+  ids fail validation (out of ``[0, n_nodes)`` under the mask) — relaunches
+  **only its failed miss-groups**, each as its own size-1 dispatch, up to
+  ``max_retries`` times with exponential ``retry_backoff_s`` backoff.
+  Size-1 relaunches are the per-request isolation mechanism: one poison row
+  can no longer doom its wave-mates' retries, and retrieval is row-
+  independent so a size-1 result is bitwise identical to the row it would
+  have occupied in the batch;
+* a group that exhausts its retries *fails closed*: its requests come back
+  with ``entry=None`` plus an error reason (the engine's degradation
+  ladder takes it from there) — ``collect`` itself never raises for a
+  retrieval fault, and the wave's in-flight cache keys are always released
+  in a ``finally`` so no key is poisoned and no later wave defers to a
+  dead owner.  A deferred request whose owner's group failed (or whose
+  owner aborted) re-dispatches as its own size-1 group instead of waiting
+  forever.
+
+Counters: ``retries`` (relaunches), ``timeouts`` (timed-out waits),
+``failures`` (groups that exhausted retries and went to the ladder).
 """
 from __future__ import annotations
 
@@ -87,6 +112,8 @@ class PrefetchWave:
     launch_step: int = 0  # engine step counter at launch
     launch_tokens: int = 0  # engine emitted-token counter at launch
     entries_by_key: dict = dataclasses.field(default_factory=dict)
+    launch_error: Optional[str] = None  # the batched dispatch itself raised
+    error_for: list = dataclasses.field(default_factory=list)  # per request
 
     @property
     def has_misses(self) -> bool:
@@ -109,15 +136,32 @@ class AdmissionPrefetcher:
         *,
         wave_size: int,
         depth: int = 1,
+        retrieval_timeout_s: Optional[float] = None,
+        max_retries: int = 0,
+        retry_backoff_s: float = 0.0,
         now_fn: Callable[[], float] = time.perf_counter,
+        sleep_fn: Callable[[float], None] = time.sleep,
     ):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        if retrieval_timeout_s is not None and retrieval_timeout_s <= 0:
+            raise ValueError(
+                f"retrieval_timeout_s must be > 0, got {retrieval_timeout_s}"
+            )
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.pipeline = pipeline
         self.cache = cache
         self.wave_size = wave_size
         self.depth = depth
+        self.retrieval_timeout_s = retrieval_timeout_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self._now = now_fn
+        self._sleep = sleep_fn
+        # node-id validation bound for corrupt-result detection; None skips
+        emb = getattr(pipeline, "node_emb", None)
+        self._n_nodes = int(emb.shape[0]) if emb is not None else None
         self._waves: deque[PrefetchWave] = deque()
         # telemetry
         self.waves = 0  # async-collected waves (prefetch schedule only)
@@ -128,6 +172,9 @@ class AdmissionPrefetcher:
         self.overlap_seconds = 0.0
         self.overlap_steps = 0
         self.overlap_tokens = 0
+        self.retries = 0  # size-1 relaunches of failed miss-groups
+        self.timeouts = 0  # waits that hit retrieval_timeout_s
+        self.failures = 0  # groups that exhausted retries (ladder-bound)
 
     @property
     def in_flight(self) -> int:
@@ -199,15 +246,21 @@ class AdmissionPrefetcher:
             # async dispatch: retrieve_many returns device arrays without a
             # host sync, so the scan/BFS/filter pipeline runs concurrently
             # with the decode steps the engine issues after this returns
-            wave.sub, wave.seeds, n_valid = self.pipeline.retrieve_many(
-                qe, batch_size=self.wave_size
-            )
-            # mark only after a successful dispatch: a raise above must not
-            # leave keys poisoned in the in-flight set forever
-            for k in wave.miss_groups:
-                cache.mark_inflight(k)
-            self.batches += 1
-            self.queries += n_valid
+            try:
+                wave.sub, wave.seeds, n_valid = self.pipeline.retrieve_many(
+                    qe, batch_size=self.wave_size
+                )
+            except Exception as exc:  # data-plane fault: contained, retried
+                # at collect (per-group, size-1) — never marked in-flight,
+                # so a concurrent wave is free to dispatch the same key
+                wave.launch_error = f"dispatch: {exc}"
+            else:
+                # mark only after a successful dispatch: a raise above must
+                # not leave keys poisoned in the in-flight set forever
+                for k in wave.miss_groups:
+                    cache.mark_inflight(k)
+                self.batches += 1
+                self.queries += n_valid
         wave.launched_at = self._now()
         self.launch_seconds += wave.launched_at - t0
         self._waves.append(wave)
@@ -227,12 +280,18 @@ class AdmissionPrefetcher:
         have landed AND every deferred request's owner has already collected
         (a deferred entry resolves from the owner's ``entries_by_key``,
         which is empty until then — collecting early would re-dispatch
-        nothing but would mis-account the hit)."""
+        nothing but would mis-account the hit).  A wave whose dispatch
+        raised, or whose wait has outlived ``retrieval_timeout_s``, is also
+        "ready": collecting it runs the retry/failure path instead of
+        stalling the scheduler behind a dead or stuck dispatch."""
         for _, k, owner_entries in wave.deferred:
             if owner_entries is not None and k not in owner_entries \
                     and self.cache.is_inflight(k):
                 return False
-        if not wave.has_misses:
+        if not wave.has_misses or wave.launch_error is not None:
+            return True
+        if self.retrieval_timeout_s is not None and \
+                self._now() >= wave.launched_at + self.retrieval_timeout_s:
             return True
         return all(
             self._arr_ready(a)
@@ -252,8 +311,10 @@ class AdmissionPrefetcher:
 
     def collect(self, *, step: int = 0, tokens: int = 0,
                 sync: bool = False) -> list:
-        """Block on the oldest wave and return ``(request, entry)`` pairs in
-        arrival order.  ``sync=True`` marks a launch-then-collect-immediately
+        """Block on the oldest wave and return ``(request, entry, error)``
+        triples in arrival order (``entry`` is None exactly when ``error``
+        is set — retries exhausted, the engine's degradation ladder takes
+        over).  ``sync=True`` marks a launch-then-collect-immediately
         schedule: no overlap is accrued (there was no window to hide in)."""
         wave = self._waves.popleft()
         return self._collect(wave, step=step, tokens=tokens, sync=sync)
@@ -268,10 +329,135 @@ class AdmissionPrefetcher:
         del self._waves[index]
         return self._collect(wave, step=step, tokens=tokens, sync=False)
 
+    # -- fault containment -----------------------------------------------------
+    def _wait_ready(self, arrs, deadline: Optional[float]) -> bool:
+        """Poll until every array is ready or ``deadline`` passes.  With no
+        deadline, return immediately and let the force block (the original,
+        timeout-free behavior)."""
+        if deadline is None:
+            return True
+        while not all(self._arr_ready(a) for a in arrs):
+            now = self._now()
+            if now >= deadline:
+                return False
+            self._sleep(min(1e-3, max(deadline - now, 1e-6)))
+        return True
+
+    def _validate_row(self, nodes, mask) -> Optional[str]:
+        """Corrupt-result check: every node id under the valid mask must be
+        a real node.  Returns an error reason, or None when clean."""
+        if self._n_nodes is None:
+            return None
+        ids = np.asarray(nodes)[np.asarray(mask, bool)]
+        if ids.size and (int(ids.min()) < 0 or int(ids.max()) >= self._n_nodes):
+            return (
+                f"corrupt: node id out of range [0, {self._n_nodes}) "
+                f"(min {int(ids.min())}, max {int(ids.max())})"
+            )
+        return None
+
+    def _retrieve_once(self, emb) -> tuple:
+        """One isolated size-1 dispatch + bounded wait + force + validate.
+        Returns ``(entry, None)`` or ``(None, reason)`` — never raises for a
+        data-plane fault."""
+        t0 = self._now()
+        try:
+            sub, seeds, _ = self.pipeline.retrieve_many(
+                np.asarray(emb, np.float32)[None], batch_size=1
+            )
+        except Exception as exc:
+            return None, f"dispatch: {exc}"
+        self.batches += 1
+        self.queries += 1
+        arrs = (sub.nodes, sub.mask, sub.dist, seeds)
+        deadline = None if self.retrieval_timeout_s is None else \
+            t0 + self.retrieval_timeout_s
+        if not self._wait_ready(arrs, deadline):
+            self.timeouts += 1
+            return None, f"timeout: not ready in {self.retrieval_timeout_s}s"
+        try:
+            nodes, mask, dist, seeds_np = (np.asarray(a) for a in arrs)
+        except Exception as exc:
+            return None, f"force: {exc}"
+        err = self._validate_row(nodes[0], mask[0])
+        if err is not None:
+            return None, err
+        return CachedRetrieval(
+            nodes=nodes[0].copy(), mask=mask[0].copy(),
+            dist=dist[0].copy(), seeds=seeds_np[0].copy(),
+        ), None
+
+    def _retry_group(self, emb, failed_attempts: int,
+                     last_reason: str) -> tuple:
+        """Relaunch one failed miss-group (size-1 dispatches) until it
+        succeeds or the retry budget is spent.  ``failed_attempts`` counts
+        dispatches already charged against this group (the batched launch
+        counts as one; a deferred orphan adopting a dead owner's key starts
+        at zero — its first dispatch is not a retry)."""
+        reason = last_reason
+        while failed_attempts <= self.max_retries:
+            if failed_attempts > 0:
+                if self.retry_backoff_s > 0:
+                    self._sleep(
+                        self.retry_backoff_s * (2 ** (failed_attempts - 1))
+                    )
+                self.retries += 1
+            entry, reason = self._retrieve_once(emb)
+            if entry is not None:
+                return entry, None
+            failed_attempts += 1
+        self.failures += 1
+        return None, reason
+
+    def _resolve_misses(self, wave: PrefetchWave, entries: dict,
+                        failures: dict) -> None:
+        """Materialize every miss-group of ``wave`` into ``entries`` (key ->
+        CachedRetrieval) or ``failures`` (key -> reason), via the batched
+        arrays when they are healthy and the per-group retry path when not."""
+        groups = list(wave.miss_groups.items())  # row order == launch order
+        todo: dict = {}  # key -> last failure reason (needs retry)
+        if wave.launch_error is not None:
+            todo = {k: wave.launch_error for k, _ in groups}
+        else:
+            arrs = (wave.sub.nodes, wave.sub.mask, wave.sub.dist, wave.seeds)
+            deadline = None if self.retrieval_timeout_s is None else \
+                wave.launched_at + self.retrieval_timeout_s
+            if not self._wait_ready(arrs, deadline):
+                self.timeouts += 1
+                reason = f"timeout: not ready in {self.retrieval_timeout_s}s"
+                todo = {k: reason for k, _ in groups}
+            else:
+                try:
+                    nodes, mask, dist, seeds_np = \
+                        (np.asarray(a) for a in arrs)
+                except Exception as exc:
+                    todo = {k: f"force: {exc}" for k, _ in groups}
+                else:
+                    for row, (k, idxs) in enumerate(groups):
+                        err = self._validate_row(nodes[row], mask[row])
+                        if err is not None:
+                            todo[k] = err
+                            continue
+                        entries[k] = CachedRetrieval(
+                            nodes=nodes[row].copy(), mask=mask[row].copy(),
+                            dist=dist[row].copy(), seeds=seeds_np[row].copy(),
+                        )
+        for k, idxs in groups:
+            if k not in todo:
+                continue
+            entry, reason = self._retry_group(
+                wave.reqs[idxs[0]].query_emb, 1, todo[k]
+            )
+            if entry is not None:
+                entries[k] = entry
+            else:
+                failures[k] = reason
+
     def _collect(self, wave: PrefetchWave, *, step: int, tokens: int,
                  sync: bool) -> list:
         cache = self.cache
         t0 = self._now()
+        wave.error_for = [None] * len(wave.reqs)
         if not sync and wave.has_misses:
             # overlap accrues only for waves that actually dispatched a
             # retrieval: a miss-free (all-hit / all-deferred) wave has
@@ -281,12 +467,11 @@ class AdmissionPrefetcher:
             self.overlap_seconds += max(0.0, t0 - wave.launched_at)
             self.overlap_steps += max(0, step - wave.launch_step)
             self.overlap_tokens += max(0, tokens - wave.launch_tokens)
+        entries: dict = {}
+        failures: dict = {}
         try:
             if wave.has_misses:
-                nodes = np.asarray(wave.sub.nodes)  # blocks until done
-                mask = np.asarray(wave.sub.mask)
-                dist = np.asarray(wave.sub.dist)
-                seeds_np = np.asarray(wave.seeds)
+                self._resolve_misses(wave, entries, failures)
                 self.block_seconds += self._now() - t0
 
             # deferred first (they are cache *hits* on earlier waves' keys —
@@ -309,24 +494,48 @@ class AdmissionPrefetcher:
                     e = owner_entries.get(k)
                     if e is not None:
                         cache.put(r.query_emb, e)
+                if e is None:
+                    # orphaned deferral: the owner's group failed (or the
+                    # owner was aborted) and its entry never landed — adopt
+                    # the key as our own size-1 miss instead of waiting on
+                    # a dead wave.  attempts=0: this request never dispatched
+                    e, reason = self._retry_group(r.query_emb, 0, "orphaned")
+                    if e is not None:
+                        cache.put(r.query_emb, e)
+                    else:
+                        wave.error_for[j] = reason
                 wave.entry_for[j] = e
             for row, (k, idxs) in enumerate(wave.miss_groups.items()):
-                entry = CachedRetrieval(
-                    nodes=nodes[row].copy(), mask=mask[row].copy(),
-                    dist=dist[row].copy(), seeds=seeds_np[row].copy(),
-                )
+                entry = entries.get(k)
+                if entry is None:
+                    for j in idxs:
+                        wave.error_for[j] = failures.get(k, "unknown fault")
+                    continue
                 cache.put(wave.reqs[idxs[0]].query_emb, entry)
                 wave.entries_by_key[k] = entry
                 for j in idxs:
                     wave.entry_for[j] = entry
         finally:
-            # even if the force raises (async retrieval error surfaces
-            # here), the keys must leave the in-flight set so later
-            # launches re-dispatch instead of deferring to a dead wave
+            # even if resolution failed, the keys must leave the in-flight
+            # set so later launches re-dispatch instead of deferring to a
+            # dead wave — no poisoned keys, ever
             for k in wave.miss_groups:
                 cache.release_inflight(k)
             wave.sub = wave.seeds = None  # drop device arrays promptly
-        return list(zip(wave.reqs, wave.entry_for))
+        return list(zip(wave.reqs, wave.entry_for, wave.error_for))
+
+    def abort(self) -> list:
+        """Discard every in-flight wave: release their in-flight cache keys
+        and hand back the never-resolved requests so the engine can mark
+        them terminal.  Part of the engine's ``abort()`` reconciliation."""
+        orphans = []
+        while self._waves:
+            w = self._waves.popleft()
+            for k in w.miss_groups:
+                self.cache.release_inflight(k)
+            w.sub = w.seeds = None
+            orphans.extend(w.reqs)
+        return orphans
 
     def stats(self) -> dict:
         denom = self.overlap_seconds + self.block_seconds
@@ -338,4 +547,7 @@ class AdmissionPrefetcher:
             "launch_seconds": self.launch_seconds,
             "collect_block_seconds": self.block_seconds,
             "hidden_frac": self.overlap_seconds / denom if denom > 0 else 0.0,
+            "retries": self.retries,
+            "timeouts": self.timeouts,
+            "retrieval_failures": self.failures,
         }

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from collections import deque
 from typing import Optional
 
@@ -66,6 +67,46 @@ def _prefetch_default() -> bool:
     return env_flag("RGL_PREFETCH")
 
 
+def _env_float(name: str) -> Optional[float]:
+    """Optional float env knob; empty/unset means None, junk raises (a typo
+    must not silently disable a fault-tolerance deadline)."""
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return None
+    try:
+        return float(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not a number") from None
+
+
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not an integer") from None
+
+
+def _degraded_default() -> bool:
+    """``RGL_DEGRADED`` env toggle, default ON: degraded-mode admission is
+    part of the graceful ladder, so only an explicit falsy value disables
+    it (the opposite polarity of ``env_flag``)."""
+    return os.environ.get("RGL_DEGRADED", "").lower() not in (
+        "0", "false", "off", "no"
+    )
+
+
+def _shed_policy_default() -> str:
+    raw = os.environ.get("RGL_SHED_POLICY", "reject").lower()
+    if raw not in ("reject", "evict-oldest"):
+        raise ValueError(
+            f"RGL_SHED_POLICY={raw!r}: expected 'reject' or 'evict-oldest'"
+        )
+    return raw
+
+
 def _admission_default() -> str:
     """``RGL_ADMISSION`` env default ("wave").  Invalid values raise — the
     two schedules produce identical outputs, so a typo would otherwise run
@@ -80,12 +121,23 @@ def _admission_default() -> str:
 
 @dataclasses.dataclass
 class RAGRequest:
-    """A raw serving request: query embedding + query text, no tokens yet."""
+    """A raw serving request: query embedding + query text, no tokens yet.
+
+    Terminal states (exactly one holds when the engine hands the request
+    back): ``done`` (served — possibly ``stale`` or ``degraded``),
+    ``failed`` (retrieval faults exhausted the whole degradation ladder, or
+    the engine was aborted; ``error`` says why), or ``shed`` (refused by
+    overload control or expired past its deadline before admission).
+    """
 
     uid: int
     query_emb: np.ndarray  # (D,) float32
     query_text: str
     max_new_tokens: int = 32
+    # seconds of deadline budget from submit time; the engine sheds the
+    # request at any launch/collect/admit boundary past it.  None falls back
+    # to the engine's default_deadline_s (None = no deadline)
+    deadline_s: Optional[float] = None
     out_tokens: list = dataclasses.field(default_factory=list)
     prompt_ids: Optional[np.ndarray] = None  # filled at admission
     retrieved_nodes: Optional[np.ndarray] = None  # filtered subgraph members
@@ -94,6 +146,13 @@ class RAGRequest:
     # retired early by KV exhaustion (contiguous arena full / paged pool
     # empty): out_tokens is shorter than max_new_tokens with no EOS
     truncated: bool = False
+    # --- fault-tolerance terminal/degraded markers (see class docstring) ---
+    stale: bool = False  # served from a TTL-expired cache entry
+    degraded: bool = False  # served retrieval-free (query-only prompt)
+    failed: bool = False
+    shed: bool = False
+    error: Optional[str] = None  # reason for failed/shed
+    deadline_at: Optional[float] = None  # absolute deadline, set at submit
 
 
 class RAGServeEngine:
@@ -107,6 +166,38 @@ class RAGServeEngine:
 
     ``pipe`` must carry a tokenizer and node_text (stages 4's inputs).
     ``prefetch=None`` reads the ``RGL_PREFETCH`` env var (default off).
+
+    **Fault tolerance.**  Retrieval faults are data-plane events, not
+    engine crashes: ``step()`` never raises for one.  A failed miss-group
+    (dispatch raise, force raise, timeout after ``retrieval_timeout_s``, or
+    a corrupt result) is retried in isolation up to ``max_retries`` times
+    (``retry_backoff_s`` exponential backoff); on exhaustion the request
+    walks the degradation ladder:
+
+    1. **stale** — a resident cache entry for the key, TTL-expired allowed
+       (``stale_served`` counter, ``RAGRequest.stale``);
+    2. **degraded** — retrieval-free decode over a query-only prompt
+       (``degraded`` counter/flag; disable with ``degraded_mode=False`` /
+       ``RGL_DEGRADED=0``);
+    3. **failed** — that one request terminates with ``failed=True`` and an
+       ``error`` reason; wave-mates are unaffected.
+
+    **Overload control.**  ``max_pending`` bounds the pending queue
+    (0 = unbounded); on overflow ``shed_policy`` picks the victim:
+    ``"reject"`` refuses the new request, ``"evict-oldest"`` sheds the
+    oldest pending one.  Per-request deadlines (``deadline_s``, or the
+    engine-wide ``default_deadline_s``) are checked at every
+    launch/collect/admit boundary — an expired request is shed, never
+    dispatched.  Shed requests surface through ``step()`` like finished
+    ones, with ``shed=True``.
+
+    ``abort()`` fails all outstanding work and reconciles every layer
+    (pending queue, in-flight prefetch waves + cache keys, decode slots +
+    paged KV blocks, admission tickets); ``drain()`` is run_to_completion
+    that aborts the stragglers instead of raising.  Env knobs:
+    ``RGL_RETRIEVAL_TIMEOUT``, ``RGL_RETRIES``, ``RGL_RETRY_BACKOFF``,
+    ``RGL_DEADLINE``, ``RGL_MAX_PENDING``, ``RGL_SHED_POLICY``,
+    ``RGL_DEGRADED``.
     """
 
     def __init__(
@@ -131,6 +222,14 @@ class RAGServeEngine:
         paged_kv: Optional[bool] = None,
         kv_block_size: Optional[int] = None,
         kv_pool_blocks: Optional[int] = None,
+        retrieval_timeout_s: Optional[float] = None,
+        max_retries: Optional[int] = None,
+        retry_backoff_s: Optional[float] = None,
+        degraded_mode: Optional[bool] = None,
+        max_pending: Optional[int] = None,
+        shed_policy: Optional[str] = None,
+        default_deadline_s: Optional[float] = None,
+        now_fn=time.monotonic,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
@@ -168,15 +267,52 @@ class RAGServeEngine:
         # batch pads to 1 row instead of `slots` — per-row retrieval is
         # row-independent, so results stay bitwise identical while the
         # per-dispatch compute stops scaling with the unused padding
+        # -- fault-tolerance / overload-control knobs (env fallbacks) ---------
+        if retrieval_timeout_s is None:
+            retrieval_timeout_s = _env_float("RGL_RETRIEVAL_TIMEOUT")
+        if max_retries is None:
+            max_retries = _env_int("RGL_RETRIES", 0)
+        if retry_backoff_s is None:
+            retry_backoff_s = _env_float("RGL_RETRY_BACKOFF") or 0.0
+        self.degraded_mode = _degraded_default() if degraded_mode is None \
+            else bool(degraded_mode)
+        if max_pending is None:
+            max_pending = _env_int("RGL_MAX_PENDING", 0)
+        if max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
+        self.max_pending = max_pending  # 0 = unbounded
+        self.shed_policy = _shed_policy_default() if shed_policy is None \
+            else str(shed_policy).lower()
+        if self.shed_policy not in ("reject", "evict-oldest"):
+            raise ValueError(
+                f"shed_policy={self.shed_policy!r}: expected 'reject' or "
+                f"'evict-oldest'"
+            )
+        if default_deadline_s is None:
+            default_deadline_s = _env_float("RGL_DEADLINE")
+        self.default_deadline_s = default_deadline_s
+        self._now = now_fn
         self.prefetcher = AdmissionPrefetcher(
             pipeline, self.cache,
             wave_size=1 if self.admission == "continuous" else slots,
             depth=prefetch_depth,
+            retrieval_timeout_s=retrieval_timeout_s,
+            max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s,
         )
         self.pending: deque = deque()
         self._inflight: dict = {}  # admission ticket -> RAGRequest
         self._next_ticket = 0  # monotonic; never reused (unlike id())
         self._step_no = 0
+        # requests that went terminal outside decode (shed / failed /
+        # degradation-exhausted); step() hands them back exactly once
+        self._terminal: list = []
+        # fault-tolerance counters (every submitted request lands in exactly
+        # one of: done, failed, shed — stale/degraded refine done)
+        self.shed_count = 0
+        self.failed_count = 0
+        self.degraded_count = 0
+        self.stale_served = 0
 
     # -- cache counters -------------------------------------------------------
     @property
@@ -202,14 +338,88 @@ class RAGServeEngine:
         p = self.prefetcher
         return p.launch_seconds + p.block_seconds
 
+    # -- terminal bookkeeping -------------------------------------------------
+    def _shed(self, req: RAGRequest, reason: str) -> None:
+        req.shed = True
+        req.error = reason
+        self.shed_count += 1
+        self._terminal.append(req)
+
+    def _fail(self, req: RAGRequest, reason: str) -> None:
+        req.failed = True
+        req.error = reason
+        self.failed_count += 1
+        self._terminal.append(req)
+
+    def _expired(self, req: RAGRequest) -> bool:
+        return req.deadline_at is not None and self._now() > req.deadline_at
+
     # -- admission ------------------------------------------------------------
-    def submit(self, req: RAGRequest) -> None:
+    def _validate(self, req: RAGRequest) -> None:
+        """Reject malformed requests at the front door, before any queue or
+        dispatch sees them — a NaN embedding must not poison a batched
+        retrieval wave, and a bad field must name the offending uid."""
+        q = np.asarray(req.query_emb, np.float32)
+        if q.ndim != 1:
+            raise ValueError(
+                f"request {req.uid}: query_emb must be 1-D, got shape "
+                f"{tuple(q.shape)}"
+            )
+        node_emb = getattr(self.pipeline, "node_emb", None)
+        if node_emb is not None and q.shape[0] != node_emb.shape[1]:
+            raise ValueError(
+                f"request {req.uid}: query_emb dim {q.shape[0]} != node "
+                f"embedding dim {node_emb.shape[1]}"
+            )
+        if not np.isfinite(q).all():
+            raise ValueError(
+                f"request {req.uid}: query_emb contains NaN/Inf"
+            )
+        if not str(req.query_text).strip():
+            raise ValueError(f"request {req.uid}: empty query_text")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}"
+            )
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(
+                f"request {req.uid}: deadline_s must be > 0, got "
+                f"{req.deadline_s}"
+            )
+
+    def submit(self, req: RAGRequest) -> bool:
+        """Validate and enqueue.  Returns True if the request entered the
+        pending queue, False if overload control shed it on arrival
+        (``shed_policy="reject"`` with a full queue) — the shed request is
+        still handed back by the next ``step()``.  Malformed requests raise
+        ``ValueError`` and never enter the system."""
+        self._validate(req)
+        deadline = req.deadline_s if req.deadline_s is not None \
+            else self.default_deadline_s
+        if deadline is not None:
+            req.deadline_at = self._now() + float(deadline)
+        if self.max_pending and len(self.pending) >= self.max_pending:
+            if self.shed_policy == "reject":
+                self._shed(req, "queue full (shed_policy=reject)")
+                return False
+            victim = self.pending.popleft()
+            self._shed(victim, "queue full (shed_policy=evict-oldest)")
         self.pending.append(req)
+        return True
 
     def _take_wave(self, limit: Optional[int] = None) -> list:
         cap = self.slots if limit is None else limit
-        take = min(len(self.pending), cap)
-        return [self.pending.popleft() for _ in range(take)]
+        out: list = []
+        while self.pending and len(out) < cap:
+            r = self.pending.popleft()
+            if self._expired(r):
+                # deadline boundary 1: never dispatch retrieval for a
+                # request that is already past its deadline
+                self._shed(r, "deadline expired before retrieval dispatch")
+                continue
+            out.append(r)
+        return out
 
     @property
     def _launch_unit(self) -> int:
@@ -219,22 +429,64 @@ class RAGServeEngine:
         return 1 if self.admission == "continuous" else self.slots
 
     def _tokenize_and_admit(self, resolved: list) -> None:
-        """Stage 4+5 handoff: linearize each (request, entry) pair and hand
-        the prompt to the decode engine under a fresh admission ticket."""
+        """Stage 4+5 handoff: linearize each resolved ``(request, entry,
+        error)`` triple and hand the prompt to the decode engine under a
+        fresh admission ticket.
+
+        This is where the graceful-degradation ladder runs: a request whose
+        retrieval failed (``entry is None``, ``error`` says why) tries a
+        stale cache entry first, then a retrieval-free (query-only) prompt,
+        and only then fails — each rung per request, so one dead retrieval
+        row never drags down its wave-mates.  A request past its deadline is
+        shed here instead of admitted (deadline boundary 3)."""
         tok = self.pipeline.tokenizer
         node_text = self.pipeline.node_text
-        for r, e in resolved:
-            texts = [node_text[int(v)] for v, m in zip(e.nodes, e.mask) if m]
-            ids, mask = tok.linearize(r.query_text, texts)
-            r.prompt_ids = ids[mask]
-            r.retrieved_nodes = e.nodes[e.mask].copy()
-            inner = Request(
-                uid=r.uid, prompt_ids=r.prompt_ids,
-                max_new_tokens=r.max_new_tokens, ticket=self._next_ticket,
-            )
-            self._inflight[inner.ticket] = r
-            self._next_ticket += 1
-            self.engine.submit(inner)
+        for r, e, err in resolved:
+            if self._expired(r):
+                self._shed(r, "deadline expired before admission")
+                continue
+            if e is None:
+                stale = self.cache.peek_stale(r.query_emb)
+                if stale is not None:
+                    # ladder rung 1: serve the resident (possibly
+                    # TTL-expired) entry rather than nothing
+                    e = stale
+                    r.stale = True
+                    self.stale_served += 1
+                elif self.degraded_mode:
+                    # ladder rung 2: retrieval-free decode (query-only
+                    # prompt); e stays None
+                    r.degraded = True
+                    self.degraded_count += 1
+                else:
+                    # ladder rung 3: fail just this request
+                    self._fail(r, err or "retrieval failed")
+                    continue
+            ticket = None
+            try:
+                if e is not None:
+                    texts = [node_text[int(v)]
+                             for v, m in zip(e.nodes, e.mask) if m]
+                    r.retrieved_nodes = e.nodes[e.mask].copy()
+                else:
+                    texts = []
+                    r.retrieved_nodes = np.empty(0, np.int32)
+                ids, mask = tok.linearize(r.query_text, texts)
+                r.prompt_ids = ids[mask]
+                inner = Request(
+                    uid=r.uid, prompt_ids=r.prompt_ids,
+                    max_new_tokens=r.max_new_tokens, ticket=self._next_ticket,
+                )
+                ticket = inner.ticket
+                self._inflight[ticket] = r
+                self._next_ticket += 1
+                self.engine.submit(inner)
+            except Exception as exc:  # per-request containment: a bad
+                # entry (e.g. out-of-range node id slipping past
+                # validation) fails its own request, not the engine
+                if ticket is not None:
+                    self._inflight.pop(ticket, None)
+                self._fail(r, f"admission: {exc}")
 
     def _admit_sync(self) -> None:
         """Sync schedule: launch one wave and collect it immediately (the
@@ -244,6 +496,8 @@ class RAGServeEngine:
         if self.admission == "continuous":
             while self.engine.free_slots > 0 and self.pending:
                 reqs = self._take_wave(1)
+                if not reqs:  # everything left was past deadline (shed)
+                    continue
                 tok = self.engine.emitted_tokens
                 self.prefetcher.launch(reqs, step=self._step_no, tokens=tok)
                 self._tokenize_and_admit(self.prefetcher.collect(
@@ -260,8 +514,10 @@ class RAGServeEngine:
 
     def _launch_pending(self) -> None:
         while self.pending and self.prefetcher.can_launch():
-            self.prefetcher.launch(self._take_wave(self._launch_unit),
-                                   step=self._step_no,
+            reqs = self._take_wave(self._launch_unit)
+            if not reqs:  # everything left was past deadline (shed)
+                continue
+            self.prefetcher.launch(reqs, step=self._step_no,
                                    tokens=self.engine.emitted_tokens)
 
     def _admit_prefetch(self) -> None:
@@ -342,11 +598,17 @@ class RAGServeEngine:
             r.truncated = inner.truncated
             r.done = True
             out.append(r)
+        if self._terminal:
+            # shed / failed requests surface through the same channel as
+            # finished ones, exactly once
+            out.extend(self._terminal)
+            self._terminal.clear()
         return out
 
     def _drained(self) -> bool:
         return (not self.pending and not self.prefetcher.in_flight
-                and not self.engine.queue and not self.engine.live.any())
+                and not self.engine.queue and not self.engine.live.any()
+                and not self._terminal)
 
     def run_to_completion(self, max_steps: int = 10_000) -> list:
         done = []
@@ -361,6 +623,47 @@ class RAGServeEngine:
             f"{int(self.engine.live.sum())} live slots)"
         )
 
+    # -- teardown / recovery --------------------------------------------------
+    def abort(self, reason: str = "aborted") -> list:
+        """Terminate every outstanding request and reconcile every layer:
+        the pending queue is shed, in-flight prefetch waves are dropped
+        (their in-flight cache keys released, so later lookups never defer
+        to a dead wave), live decode slots are retired (paged KV blocks
+        returned to the pool), and stranded admission tickets are cleared.
+        The engine is immediately reusable for a fresh workload.  Returns
+        every request that went terminal, exactly once."""
+        while self.pending:
+            self._shed(self.pending.popleft(), f"shed: {reason}")
+        for r in self.prefetcher.abort():
+            self._fail(r, f"aborted before admission: {reason}")
+        for inner in self.engine.abort(reason=reason):
+            r = self._inflight.pop(inner.ticket, None)
+            if r is None:
+                continue
+            r.out_tokens = inner.out_tokens
+            r.truncated = inner.truncated
+            self._fail(r, inner.error or reason)
+        for ticket in list(self._inflight):
+            # tickets whose inner request the decode engine lost track of
+            # (should be impossible; reconciled defensively)
+            self._fail(self._inflight.pop(ticket), f"stranded: {reason}")
+        out = list(self._terminal)
+        self._terminal.clear()
+        return out
+
+    def drain(self, max_steps: int = 10_000) -> list:
+        """``run_to_completion`` that never raises: if work is still
+        outstanding after ``max_steps``, the stragglers are aborted and
+        returned (``failed``/``shed``) alongside the completed requests, and
+        the engine is left reusable."""
+        done = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if self._drained():
+                return done
+        done.extend(self.abort(reason=f"drain gave up after {max_steps} steps"))
+        return done
+
     def stats(self) -> dict:
         s = self.cache.stats()
         s.update(
@@ -369,6 +672,11 @@ class RAGServeEngine:
             retrieval_seconds=self.retrieval_seconds,
             prefetch=self.prefetch,
             admission=self.admission,
+            shed=self.shed_count,
+            failed=self.failed_count,
+            degraded=self.degraded_count,
+            stale_served=self.stale_served,
+            degraded_mode=self.degraded_mode,
             **self.prefetcher.stats(),
             **self.engine.decode_stats(),
         )

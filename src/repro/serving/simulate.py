@@ -1,4 +1,4 @@
-"""Retrieval-latency simulation for benchmarking the async admission path.
+"""Retrieval-latency and retrieval-fault simulation for the serving stack.
 
 JAX async dispatch makes a real ``retrieve_many`` overlap decode naturally,
 but its latency on a tiny CPU test graph is microseconds — too small to
@@ -15,14 +15,38 @@ A sync admission schedule therefore pays the full ``cost_s`` at every wave
 boundary, while the prefetch schedule hides whatever fraction of it decode
 steps cover — which is the comparison ``benchmarks/async_serving.py`` and
 the overlap-oracle tests need to make deterministically.
+
+:class:`FaultyRetrieval` extends the same idea to *failure* injection: a
+seeded per-row fault schedule (each exact query embedding deterministically
+maps to one fault type or to "clean") makes every production failure mode
+reproducibly testable on CPU:
+
+* ``dispatch`` — ``retrieve_many`` raises before returning (the jitted call
+  itself died: OOM, bad shard, poisoned input reaching the kernel),
+* ``force``    — dispatch succeeds but blocking on the result raises (an
+  async device error surfacing at the host sync),
+* ``stuck``    — the result never becomes ready (``is_ready()`` stays
+  False forever; a force before readiness raises instead of hanging so an
+  unconfigured timeout fails loudly rather than deadlocking the test),
+* ``corrupt``  — the result lands "successfully" but carries out-of-range
+  node ids under the valid mask (a wrong-shard answer / memory stomp).
+
+``fails_per_row`` bounds how many dispatches a faulty row poisons before it
+heals (None = permanent), which is what makes bounded-retry success paths
+and retry-exhaustion ladder paths separately testable.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Callable, Optional
 
 import numpy as np
+
+
+class RetrievalFault(RuntimeError):
+    """An injected retrieval failure (see :class:`FaultyRetrieval`)."""
 
 
 class LazyHostArray:
@@ -32,26 +56,41 @@ class LazyHostArray:
     the same contract as forcing an in-flight JAX device array.  ``events``
     (if given) receives ``(tag, payload)`` tuples at force time, so tests
     can prove *when* the collect-phase block happened relative to decode.
+
+    ``exc`` (if given) is raised at force time instead of returning data —
+    the async-device-error-surfacing-at-host-sync failure mode.  An infinite
+    ``ready_at`` models a stuck computation: ``is_ready()`` never flips, and
+    forcing raises immediately (a real device array would block forever;
+    raising keeps an unconfigured-timeout bug loud instead of hung).
     """
 
     def __init__(self, data: np.ndarray, ready_at: float,
                  sleep: Callable[[float], None] = time.sleep,
                  now: Callable[[], float] = time.perf_counter,
-                 events: Optional[list] = None, tag: str = "force"):
+                 events: Optional[list] = None, tag: str = "force",
+                 exc: Optional[Exception] = None):
         self._data = np.asarray(data)
         self._ready_at = ready_at
         self._sleep = sleep
         self._now = now
         self._events = events
         self._tag = tag
+        self._exc = exc
 
     def __array__(self, dtype=None, copy=None):
+        if np.isinf(self._ready_at):
+            raise RetrievalFault(
+                "stuck retrieval row forced before ready (configure "
+                "retrieval_timeout_s to shed it instead)"
+            )
         remaining = self._ready_at - self._now()
         if remaining > 0:
             self._sleep(remaining)
         if self._events is not None:
             self._events.append((self._tag, self._now()))
             self._events = None  # log the first force only
+        if self._exc is not None:
+            raise self._exc
         a = self._data
         return a.astype(dtype) if dtype is not None else a
 
@@ -123,3 +162,155 @@ class DelayedRetrieval:
             dist=LazyHostArray(np.asarray(sub.dist), ready_at),
         )
         return lazy, LazyHostArray(np.asarray(seeds), ready_at), n_valid
+
+
+class FaultyRetrieval:
+    """Pipeline proxy with a seeded, per-row, reproducible fault schedule.
+
+    Each exact query embedding deterministically maps (via a keyed hash of
+    its float32 bytes + ``seed``) to one of ``fault_types`` with probability
+    ``fault_rate``, or to "clean".  The same embedding therefore faults the
+    same way in every run, every wave composition, and every admission
+    schedule — which is what lets the chaos tests compare a faulted run's
+    fault-free subset bitwise against a no-fault run.
+
+    Fault semantics per dispatch (a dispatch is doomed by ANY scheduled
+    fault among its rows; per-request isolation is the *retry layer's* job —
+    it re-dispatches failed miss-groups one by one, see
+    :class:`repro.serving.prefetch.AdmissionPrefetcher`):
+
+    * ``dispatch`` — ``retrieve_many`` raises :class:`RetrievalFault`.
+    * ``force``    — arrays return, but forcing them raises.
+    * ``stuck``    — arrays never become ready (``is_ready()`` False
+      forever); forcing one raises instead of hanging.
+    * ``corrupt``  — arrays force fine but the faulty row's node ids are
+      rewritten out of range (``>= n_nodes``) under the valid mask.
+
+    ``fails_per_row``: how many dispatches each faulty row poisons before it
+    heals (None = permanent).  ``fails_per_row=1`` + retries makes transient
+    recovery testable; permanent faults exercise the degradation ladder.
+    ``cost_s`` adds the usual simulated latency on clean dispatches.
+    """
+
+    FAULT_TYPES = ("dispatch", "force", "stuck", "corrupt")
+
+    def __init__(self, inner, *, seed: int = 0, fault_rate: float = 0.2,
+                 cost_s: float = 0.0,
+                 fault_types: tuple = FAULT_TYPES,
+                 fails_per_row: Optional[int] = None,
+                 events: Optional[list] = None):
+        if not 0.0 <= fault_rate <= 1.0:
+            raise ValueError(f"fault_rate must be in [0, 1], got {fault_rate}")
+        unknown = [t for t in fault_types if t not in self.FAULT_TYPES]
+        if unknown:
+            raise ValueError(
+                f"unknown fault types {unknown}; expected from "
+                f"{self.FAULT_TYPES}"
+            )
+        self.inner = inner
+        self.seed = int(seed)
+        self.fault_rate = float(fault_rate)
+        self.cost_s = float(cost_s)
+        self.fault_types = tuple(fault_types)
+        self.fails_per_row = fails_per_row
+        self.events = events
+        self.dispatches = 0
+        self.injected = {t: 0 for t in self.FAULT_TYPES}
+        self._fail_left: dict = {}  # row key -> remaining faulty dispatches
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    @staticmethod
+    def _row_key(row: np.ndarray) -> bytes:
+        return np.ascontiguousarray(
+            np.asarray(row, np.float32)
+        ).ravel().tobytes()
+
+    def fault_of(self, query_emb) -> Optional[str]:
+        """The *scheduled* fault type for this exact embedding (ignoring
+        ``fails_per_row`` healing), or None if the row is clean.  Tests use
+        this to partition requests into faulty / fault-free subsets."""
+        h = hashlib.blake2b(
+            self._row_key(query_emb), digest_size=8,
+            key=str(self.seed).encode(),
+        ).digest()
+        rng = np.random.default_rng(int.from_bytes(h, "little"))
+        if not self.fault_types or rng.random() >= self.fault_rate:
+            return None
+        return self.fault_types[int(rng.integers(len(self.fault_types)))]
+
+    def _active_fault(self, row: np.ndarray) -> Optional[str]:
+        """Scheduled fault, unless the row has already spent its
+        ``fails_per_row`` budget (healed)."""
+        ft = self.fault_of(row)
+        if ft is None or self.fails_per_row is None:
+            return ft
+        left = self._fail_left.get(self._row_key(row), self.fails_per_row)
+        return ft if left > 0 else None
+
+    def _consume(self, row: np.ndarray, ft: str) -> None:
+        self.injected[ft] += 1
+        if self.fails_per_row is not None:
+            k = self._row_key(row)
+            self._fail_left[k] = \
+                self._fail_left.get(k, self.fails_per_row) - 1
+
+    def retrieve_many(self, query_embs, *, batch_size=None, encoder=None):
+        q = np.asarray(query_embs, np.float32)
+        if q.ndim == 1:
+            q = q[None]
+        self.dispatches += 1
+        faults = [(q[i], self._active_fault(q[i])) for i in range(q.shape[0])]
+        now = time.perf_counter()
+        if self.events is not None:
+            self.events.append(("launch", now))
+
+        # a dispatch fault kills the call before the inner pipeline runs
+        dispatch_rows = [r for r, ft in faults if ft == "dispatch"]
+        if dispatch_rows:
+            for r in dispatch_rows:
+                self._consume(r, "dispatch")
+            raise RetrievalFault(
+                f"injected dispatch fault ({len(dispatch_rows)} row(s))"
+            )
+
+        sub, seeds, n_valid = self.inner.retrieve_many(
+            q, batch_size=batch_size, encoder=encoder
+        )
+        nodes = np.asarray(sub.nodes).copy()
+        mask = np.asarray(sub.mask)
+        dist = np.asarray(sub.dist)
+        seeds_np = np.asarray(seeds)
+
+        corrupt_rows = [i for i, (_, ft) in enumerate(faults)
+                        if ft == "corrupt"]
+        if corrupt_rows:
+            n_nodes = int(self.inner.node_emb.shape[0])
+            for i in corrupt_rows:
+                # out-of-range ids under the valid mask: exactly what a
+                # wrong-shard answer or a memory stomp would hand back
+                nodes[i, mask[i]] = n_nodes + 1 + i
+                self._consume(q[i], "corrupt")
+
+        ready_at = now + self.cost_s
+        exc = None
+        stuck_rows = [r for r, ft in faults if ft == "stuck"]
+        force_rows = [r for r, ft in faults if ft == "force"]
+        if stuck_rows:
+            for r in stuck_rows:
+                self._consume(r, "stuck")
+            ready_at = np.inf  # never ready; a batched result is one unit
+        elif force_rows:
+            for r in force_rows:
+                self._consume(r, "force")
+            exc = RetrievalFault(
+                f"injected force fault ({len(force_rows)} row(s))"
+            )
+
+        lazy = _LazySubgraph(
+            nodes=LazyHostArray(nodes, ready_at, events=self.events, exc=exc),
+            mask=LazyHostArray(mask, ready_at, exc=exc),
+            dist=LazyHostArray(dist, ready_at, exc=exc),
+        )
+        return lazy, LazyHostArray(seeds_np, ready_at, exc=exc), n_valid
