@@ -1,0 +1,139 @@
+"""Regression gate for benchmark artifacts: BENCH_*.json vs committed
+envelopes.
+
+``benchmarks/envelopes.json`` maps each benchmark artifact to a list of
+rules, each pinning one metric to a ``min`` and/or ``max`` bound::
+
+    {"BENCH_multi_replica.json": [
+        {"path": "crash.goodput_ratio_vs_2healthy", "min": 0.8},
+        {"path": "crash.failover_3_with_crash.stranded", "max": 0}
+    ]}
+
+``path`` is dotted-key navigation with ``[i]`` list indexing
+(``results[2].speedup``).  The nightly CI job re-runs the full benchmark
+suite and then runs this checker over the freshly emitted artifacts, so a
+perf or correctness regression (a speedup collapsing, requests going
+missing, failover starting to strand work) fails the job instead of rotting
+silently in a JSON nobody reads.
+
+    PYTHONPATH=src python -m benchmarks.check_envelopes
+    PYTHONPATH=src python -m benchmarks.check_envelopes --dir . \
+        --envelopes benchmarks/envelopes.json --allow-missing
+
+Exit status: 0 when every present artifact satisfies every rule, 1 on any
+violation (or any missing artifact, unless ``--allow-missing``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+_TOKEN = re.compile(r"([^.\[\]]+)|\[(\d+)\]")
+
+
+def resolve(doc, path: str):
+    """Navigate ``doc`` by a dotted path with [i] list indexing.  Raises
+    ``KeyError``/``IndexError``/``TypeError`` with the offending segment so
+    a typo in envelopes.json fails loudly, not as a silent pass."""
+    pos = 0
+    cur = doc
+    for m in _TOKEN.finditer(path):
+        if m.start() != pos and path[pos:m.start()] not in (".", ""):
+            raise KeyError(f"malformed path {path!r} at {path[pos:]!r}")
+        pos = m.end()
+        key, idx = m.group(1), m.group(2)
+        if idx is not None:
+            if not isinstance(cur, list):
+                raise TypeError(f"{path!r}: [{idx}] into non-list")
+            cur = cur[int(idx)]
+        else:
+            if not isinstance(cur, dict) or key not in cur:
+                raise KeyError(f"{path!r}: no key {key!r}")
+            cur = cur[key]
+    if pos != len(path):
+        raise KeyError(f"malformed path {path!r} at {path[pos:]!r}")
+    return cur
+
+
+def check_report(report: dict, rules: list, label: str = "") -> list:
+    """Apply ``rules`` to one loaded benchmark report.  Returns a list of
+    human-readable violation strings (empty = clean)."""
+    bad = []
+    for rule in rules:
+        path = rule["path"]
+        try:
+            value = resolve(report, path)
+        except Exception as exc:
+            bad.append(f"{label}{path}: unresolvable ({exc})")
+            continue
+        if not isinstance(value, (int, float)) or isinstance(value, bool):
+            bad.append(f"{label}{path}: not a number ({value!r})")
+            continue
+        lo, hi = rule.get("min"), rule.get("max")
+        if lo is None and hi is None:
+            bad.append(f"{label}{path}: rule has neither min nor max")
+            continue
+        if lo is not None and value < lo:
+            bad.append(f"{label}{path} = {value:g} < min {lo:g}")
+        if hi is not None and value > hi:
+            bad.append(f"{label}{path} = {value:g} > max {hi:g}")
+    return bad
+
+
+def check_all(envelopes: dict, bench_dir: str,
+              allow_missing: bool = False) -> tuple:
+    """Check every artifact named in ``envelopes``.  Returns
+    ``(violations, checked, missing)``."""
+    violations, checked, missing = [], [], []
+    for fname, rules in envelopes.items():
+        if fname.startswith("_"):
+            continue  # comment keys
+        fpath = os.path.join(bench_dir, fname)
+        if not os.path.exists(fpath):
+            missing.append(fname)
+            if not allow_missing:
+                violations.append(f"{fname}: artifact missing")
+            continue
+        with open(fpath) as f:
+            report = json.load(f)
+        violations.extend(check_report(report, rules, label=f"{fname}: "))
+        checked.append(fname)
+    return violations, checked, missing
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--envelopes",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "envelopes.json"))
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="skip artifacts that were not emitted instead of "
+                         "failing (local partial runs)")
+    args = ap.parse_args()
+    with open(args.envelopes) as f:
+        envelopes = json.load(f)
+    violations, checked, missing = check_all(
+        envelopes, args.dir, allow_missing=args.allow_missing
+    )
+    for name in checked:
+        n = len([r for r in envelopes[name]])
+        print(f"checked {name}: {n} rule(s)")
+    for name in missing:
+        print(f"missing {name}" + (" (allowed)" if args.allow_missing else ""))
+    if violations:
+        print(f"\n{len(violations)} envelope violation(s):", file=sys.stderr)
+        for v in violations:
+            print(f"  FAIL {v}", file=sys.stderr)
+        return 1
+    print(f"\nall envelopes satisfied "
+          f"({len(checked)} artifact(s), {len(missing)} missing)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV blocks:
   * fault_tolerance     — goodput vs injected retrieval-fault rate, with
                           and without retries + the degradation ladder
                           (also writes BENCH_fault_tolerance.json)
+  * multi_replica       — goodput/latency vs replica count behind the
+                          health-aware router, plus crash-mid-run failover
+                          vs the naive (stranding) router (also writes
+                          BENCH_multi_replica.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 
@@ -41,7 +45,7 @@ def main() -> None:
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
         "async_serving", "sharding", "scaling", "spec_decode", "paged_kv",
-        "fault_tolerance",
+        "fault_tolerance", "multi_replica",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
@@ -60,7 +64,7 @@ def main() -> None:
 
     from benchmarks import (
         abstract_generation, async_serving, fault_tolerance, index_sharding,
-        kernels, modality_completion, paged_kv, rag_serving,
+        kernels, modality_completion, multi_replica, paged_kv, rag_serving,
         retrieval_scaling, spec_decode,
     )
 
@@ -172,6 +176,25 @@ def main() -> None:
                   f"ok={res['completed']};failed={res['failed']};"
                   f"degraded={res['degraded_served']};"
                   f"naive_ok={nai['completed']}")
+    if args.only in (None, "multi_replica"):
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=8, max_new=6, slots=3,
+                 replica_counts=(1, 2), crash_step=2) if smoke else
+            dict(n_nodes=1000, n_requests=12, max_new=8,
+                 replica_counts=(1, 2, 3)))
+        rep = multi_replica.run(**kw)
+        multi_replica.write_json(rep, bench_path("multi_replica"))
+        for row in rep["scaling"]:
+            print(f"multi_replica/replicas={row['replicas']},"
+                  f"{row['wall_s'] * 1e6:.0f},"
+                  f"goodput={row['goodput_tok_s']:.1f}tok_s;"
+                  f"p99={row['p99_s'] * 1e3:.0f}ms")
+        c = rep["crash"]
+        fo, na = c["failover_3_with_crash"], c["naive_3_with_crash"]
+        print(f"multi_replica/crash,{fo['wall_s'] * 1e6:.0f},"
+              f"ratio_vs_2healthy={c['goodput_ratio_vs_2healthy']:.2f}x;"
+              f"redispatched={fo['redispatched']};"
+              f"naive_stranded={na['stranded']}")
 
 
 if __name__ == "__main__":

@@ -10,10 +10,19 @@ Two modes:
   index feed raw (query embedding, query text) requests through
   ``RAGServeEngine`` (batched retrieval admission + retrieval cache + decode).
 
+``--rag --replicas N`` (N > 1) serves the same stream through an N-replica
+fleet behind ``ReplicaRouter``: a shared retrieval cache (fleet-wide
+single-flight), health-scored circuit breakers per replica, and —
+with ``--crash-replica STEP`` — a live failover demo where one replica
+crashes mid-run and its in-flight requests are re-dispatched onto the
+survivors.
+
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --rag
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --rag \
         --index sharded --shards 4
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --rag \
+        --replicas 3 --crash-replica 3
 """
 from __future__ import annotations
 
@@ -28,7 +37,8 @@ import numpy as np
 from repro import configs as C
 from repro.models.transformer import model as tm
 from repro.serving import (
-    FaultyRetrieval, RAGRequest, RAGServeEngine, Request, ServeEngine,
+    FaultyReplica, FaultyRetrieval, RAGRequest, RAGServeEngine, ReplicaRouter,
+    Request, RetrievalCache, ServeEngine,
 )
 
 
@@ -104,24 +114,27 @@ def _serve_rag(cfg, args) -> None:
     # the linearized graph prompt (<= tokenizer max_len) plus generated
     # tokens must fit the arena; sliding_window only bounds attention reach
     cache_len = max(cfg.sliding_window or 0, 96 + args.max_new + 1)
-    eng = RAGServeEngine(pipe, params, cfg, slots=args.slots,
-                         cache_len=cache_len, cache_policy=args.cache_policy,
-                         cache_ttl=args.cache_ttl,
-                         prefetch=args.prefetch,
-                         prefetch_depth=args.prefetch_depth,
-                         admission=args.admission,
-                         spec_decode=args.spec_decode,
-                         draft_window=args.draft_window,
-                         paged_kv=args.paged_kv,
-                         kv_block_size=args.kv_block,
-                         kv_pool_blocks=args.pool_blocks,
-                         retrieval_timeout_s=args.retrieval_timeout,
-                         max_retries=args.retries,
-                         retry_backoff_s=args.retry_backoff,
-                         degraded_mode=args.degraded,
+    engine_kw = dict(slots=args.slots, cache_len=cache_len,
+                     cache_policy=args.cache_policy,
+                     cache_ttl=args.cache_ttl,
+                     prefetch=args.prefetch,
+                     prefetch_depth=args.prefetch_depth,
+                     admission=args.admission,
+                     spec_decode=args.spec_decode,
+                     draft_window=args.draft_window,
+                     paged_kv=args.paged_kv,
+                     kv_block_size=args.kv_block,
+                     kv_pool_blocks=args.pool_blocks,
+                     retrieval_timeout_s=args.retrieval_timeout,
+                     max_retries=args.retries,
+                     retry_backoff_s=args.retry_backoff,
+                     degraded_mode=args.degraded)
+    if args.replicas > 1:
+        return _serve_rag_fleet(pipe, g, emb, params, cfg, engine_kw, args)
+    eng = RAGServeEngine(pipe, params, cfg,
                          max_pending=args.max_pending,
                          shed_policy=args.shed_policy,
-                         default_deadline_s=args.deadline)
+                         default_deadline_s=args.deadline, **engine_kw)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -157,6 +170,65 @@ def _serve_rag(cfg, args) -> None:
               f"{s['overlap_tokens']} accepted tokens), "
               f"hidden_frac={s['hidden_frac']:.2f}")
     _print_decode_stats(s)
+
+
+def _serve_rag_fleet(pipe, g, emb, params, cfg, engine_kw, args) -> None:
+    # shed/deadline knobs move to the router's front door: the router pins
+    # the absolute deadline at submit and sheds on queue overflow, so the
+    # per-replica engines run unbounded underneath it
+    cache = RetrievalCache(capacity=256 * args.replicas,
+                           policy=args.cache_policy, ttl=args.cache_ttl)
+    engines = [
+        RAGServeEngine(pipe, params, cfg, retrieval_cache=cache, **engine_kw)
+        for _ in range(args.replicas)
+    ]
+    if args.crash_replica is not None:
+        engines[-1] = FaultyReplica(engines[-1], mode="crash",
+                                    crash_step=args.crash_replica)
+    router = ReplicaRouter(engines,
+                           failover=args.failover,
+                           max_pending=args.max_pending or 0,
+                           shed_policy=args.shed_policy or "reject",
+                           replica_depth=args.router_depth,
+                           health_window=args.router_window,
+                           trip_threshold=args.router_trip,
+                           cooldown_steps=args.router_cooldown,
+                           default_deadline_s=args.deadline)
+    rng = np.random.default_rng(0)
+    q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
+    emb_np = np.asarray(emb)
+    t0 = time.time()
+    for u, qi in enumerate(q_ids):
+        router.submit(RAGRequest(
+            uid=u, query_emb=emb_np[qi],
+            query_text=" ".join(g.node_text[qi].split()[:4]),
+            max_new_tokens=args.max_new,
+        ))
+    done = router.drain()
+    dt = time.time() - t0
+    ok = [r for r in done if r.done and not r.failed]
+    toks = sum(len(r.out_tokens) for r in ok)
+    s = router.stats()
+    cs = cache.stats()
+    print(f"[{args.arch}] fleet of {args.replicas} replicas RAG-served "
+          f"{len(ok)}/{len(done)} requests / {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s)")
+    print(f"  router: {s['submitted']} submitted, "
+          f"{s['front_door_shed']} shed, "
+          f"{s['failovers']} failover(s), {s['redispatched']} re-dispatched, "
+          f"{s['stranded']} stranded")
+    print(f"  shared cache: {cs['hits']}/{cs['hits'] + cs['misses']} hits, "
+          f"{cs['stale_hits']} stale hits, {cs['size']} entries")
+    for pr in s["per_replica"]:
+        line = (f"  {pr['name']}: circuit={pr['circuit']}, "
+                f"dispatched={pr['dispatched']}, "
+                f"delivered={pr['delivered']}, "
+                f"crashes={pr['crashes']}, trips={pr['trips']}")
+        h = pr["health"]  # None for a crashed replica (health unreadable)
+        if h is not None:
+            line += (f"; retries={h['retries']}, timeouts={h['timeouts']}, "
+                     f"failed={h['failed']}, degraded={h['degraded']}")
+        print(line)
 
 
 def main():
@@ -255,6 +327,33 @@ def main():
                          "and the stale cache are exhausted (--no-degraded "
                          "fails such requests; default honors RGL_DEGRADED, "
                          "on)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve --rag through N engine replicas behind the "
+                         "health-aware ReplicaRouter with a shared "
+                         "retrieval cache (1 = single engine, no router)")
+    ap.add_argument("--failover", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="re-dispatch a crashed replica's in-flight "
+                         "requests onto survivors (--no-failover strands "
+                         "them failed — the naive baseline)")
+    ap.add_argument("--crash-replica", type=int, default=None,
+                    metavar="STEP",
+                    help="failover demo: the last replica crashes after "
+                         "STEP engine steps")
+    ap.add_argument("--router-depth", type=int, default=None,
+                    help="max assigned requests per replica before the "
+                         "router stops routing to it (default 2x slots)")
+    ap.add_argument("--router-window", type=int, default=8,
+                    help="router health window: fault-counter deltas from "
+                         "the last N delivery rounds feed the circuit "
+                         "breaker")
+    ap.add_argument("--router-trip", type=int, default=3,
+                    help="fault-delta sum over the window that trips a "
+                         "replica's circuit open")
+    ap.add_argument("--router-cooldown", type=int, default=8,
+                    help="router steps an open circuit waits before "
+                         "half-open probing (also the crashed-replica "
+                         "revival probe interval)")
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="inject seeded retrieval faults on this fraction "
                          "of query rows (demo/bench mode; 0 = off)")

@@ -2,10 +2,13 @@ from repro.serving.engine import ServeEngine, Request
 from repro.serving.cache import RetrievalCache, CachedRetrieval
 from repro.serving.prefetch import AdmissionPrefetcher, PrefetchWave
 from repro.serving.rag_engine import RAGServeEngine, RAGRequest
+from repro.serving.router import ReplicaRouter
 from repro.serving.simulate import (
     DelayedRetrieval,
+    FaultyReplica,
     FaultyRetrieval,
     LazyHostArray,
+    ReplicaFault,
     RetrievalFault,
 )
 
@@ -14,5 +17,7 @@ __all__ = [
     "RetrievalCache", "CachedRetrieval",
     "AdmissionPrefetcher", "PrefetchWave",
     "RAGServeEngine", "RAGRequest",
+    "ReplicaRouter",
     "DelayedRetrieval", "FaultyRetrieval", "LazyHostArray", "RetrievalFault",
+    "FaultyReplica", "ReplicaFault",
 ]

@@ -26,11 +26,18 @@ retrieval fails and retries are exhausted — a TTL-expired answer beats no
 answer.
 
 For async admission prefetch the cache also tracks an **in-flight miss
-set**: keys whose retrieval has been dispatched but whose results have not
-been collected yet.  A later admission launch consults it so a
+registry**: keys whose retrieval has been dispatched but whose results have
+not been collected yet.  A later admission launch consults it so a
 retrieved-but-not-yet-collected query is never re-dispatched — the request
 defers to the in-flight wave instead (see
-:class:`repro.serving.prefetch.AdmissionPrefetcher`).
+:class:`repro.serving.prefetch.AdmissionPrefetcher`).  Each in-flight key
+may carry the *owner wave's* ``entries_by_key`` dict (filled in place at
+that wave's collect), which is what makes the protocol work **across
+replicas sharing one cache**: a prefetcher that finds a key in flight but
+owned by none of its own waves can still defer — single-flight semantics
+for the whole replica fleet, one dispatch per unique query no matter which
+replica's request arrives first (see
+:class:`repro.serving.router.ReplicaRouter`).
 """
 from __future__ import annotations
 
@@ -89,11 +96,16 @@ class RetrievalCache:
         self.ttl = ttl
         self._now = now_fn
         self._data: OrderedDict[bytes, _Slot] = OrderedDict()  # recency order
-        self._inflight: set[bytes] = set()  # dispatched, not yet collected
+        # dispatched-but-uncollected keys -> owner wave's entries_by_key dict
+        # (None for owners that did not register one)
+        self._inflight: dict[bytes, dict | None] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0  # capacity evictions by the active policy
         self.expired = 0  # ttl expiries
+        self.stale_hits = 0  # peek_stale found a resident (possibly
+        #                      TTL-expired) entry to degrade onto
+        self.stale_misses = 0  # peek_stale found nothing resident
 
     def __len__(self) -> int:
         return len(self._data)
@@ -102,17 +114,28 @@ class RetrievalCache:
         q = np.asarray(query_emb, np.float32).ravel()
         return np.round(q / self.quant_eps).astype(np.int32).tobytes()
 
-    # -- in-flight miss set ---------------------------------------------------
-    def mark_inflight(self, key: bytes) -> None:
+    # -- in-flight miss registry ----------------------------------------------
+    def mark_inflight(self, key: bytes, entries: dict | None = None) -> None:
         """Record that ``key``'s retrieval has been dispatched but not yet
-        collected, so later admission launches defer instead of re-dispatch."""
-        self._inflight.add(key)
+        collected, so later admission launches defer instead of re-dispatch.
+
+        ``entries`` (optional) is the owning wave's ``entries_by_key`` dict,
+        filled in place at that wave's collect — registering it lets a
+        *different* prefetcher sharing this cache defer to the owner too
+        (cross-replica single flight)."""
+        self._inflight[key] = entries
 
     def is_inflight(self, key: bytes) -> bool:
         return key in self._inflight
 
+    def inflight_entries(self, key: bytes) -> dict | None:
+        """The registered owner's ``entries_by_key`` dict for an in-flight
+        ``key`` (None if the key is not in flight, or its owner registered
+        no dict).  Cross-replica deferral resolves through this."""
+        return self._inflight.get(key)
+
     def release_inflight(self, key: bytes) -> None:
-        self._inflight.discard(key)
+        self._inflight.pop(key, None)
 
     @property
     def inflight_count(self) -> int:
@@ -152,9 +175,16 @@ class RetrievalCache:
         """Degraded-mode lookup: return the resident entry for this key even
         if TTL-expired, without touching hit/miss counters or recency.  The
         serving engine falls back to this when live retrieval has failed and
-        retries are exhausted (counted there as ``stale_served``)."""
+        retries are exhausted (counted there as ``stale_served``).  Counted
+        here as ``stale_hits`` / ``stale_misses`` so degraded serving is
+        observable at the cache tier too — with several engines sharing one
+        cache, the cache-level totals are the fleet-wide view."""
         slot = self._data.get(self.key(query_emb))
-        return slot.entry if slot is not None else None
+        if slot is None:
+            self.stale_misses += 1
+            return None
+        self.stale_hits += 1
+        return slot.entry
 
     def hit_count(self, query_emb) -> int:
         """Per-entry hit count (0 if absent) — the lfu eviction signal."""
@@ -205,6 +235,8 @@ class RetrievalCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "expired": self.expired,
+            "stale_hits": self.stale_hits,
+            "stale_misses": self.stale_misses,
             "policy": self.policy,
             "size": len(self._data),
             "inflight": len(self._inflight),

@@ -180,6 +180,12 @@ class AdmissionPrefetcher:
     def in_flight(self) -> int:
         return len(self._waves)
 
+    @property
+    def in_flight_requests(self) -> int:
+        """Requests inside launched-but-uncollected waves (load signal for
+        the replica router's health snapshot)."""
+        return sum(len(w.reqs) for w in self._waves)
+
     def can_launch(self) -> bool:
         return len(self._waves) < self.depth
 
@@ -224,14 +230,22 @@ class AdmissionPrefetcher:
                 continue
             if cache.is_inflight(k):  # owned by an earlier uncollected wave
                 owner_entries = self._owner_entries(k)
+                if owner_entries is None:
+                    # not one of OUR waves — with a shared cache the owner
+                    # may be another replica's prefetcher, which registered
+                    # its entries_by_key dict at mark_inflight: defer to it
+                    # exactly like an intra-engine owner (cross-replica
+                    # single flight — one dispatch per unique query across
+                    # the whole fleet)
+                    owner_entries = cache.inflight_entries(k)
                 if owner_entries is not None:
                     wave.deferred.append((j, k, owner_entries))
                     continue
-                # in-flight marker with no owning wave here: a stale key
-                # from a shared cache (another engine's wave, or a dead
-                # engine that never collected) — fall through and treat as
-                # an ordinary miss so the query is re-dispatched instead of
-                # deferring to a result that will never arrive
+                # in-flight marker with no registered owner anywhere: a
+                # stale key from a dead engine that never collected — fall
+                # through and treat as an ordinary miss so the query is
+                # re-dispatched instead of deferring to a result that will
+                # never arrive
             e = cache.get(r.query_emb)
             if e is not None:
                 wave.entry_for[j] = e
@@ -256,9 +270,11 @@ class AdmissionPrefetcher:
                 wave.launch_error = f"dispatch: {exc}"
             else:
                 # mark only after a successful dispatch: a raise above must
-                # not leave keys poisoned in the in-flight set forever
+                # not leave keys poisoned in the in-flight set forever.
+                # Registering entries_by_key lets OTHER prefetchers sharing
+                # this cache defer to this wave (cross-replica single flight)
                 for k in wave.miss_groups:
-                    cache.mark_inflight(k)
+                    cache.mark_inflight(k, wave.entries_by_key)
                 self.batches += 1
                 self.queries += n_valid
         wave.launched_at = self._now()

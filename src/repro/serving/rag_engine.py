@@ -198,6 +198,13 @@ class RAGServeEngine:
     ``RGL_RETRIEVAL_TIMEOUT``, ``RGL_RETRIES``, ``RGL_RETRY_BACKOFF``,
     ``RGL_DEADLINE``, ``RGL_MAX_PENDING``, ``RGL_SHED_POLICY``,
     ``RGL_DEGRADED``.
+
+    **Replica embedding.**  The engine is designed to run as one replica of
+    a fleet behind :class:`repro.serving.router.ReplicaRouter`: pass the
+    same ``retrieval_cache=`` instance to every replica to share the
+    retrieval tier (the in-flight key registry gives the fleet single-flight
+    semantics — see :mod:`repro.serving.cache`), and the router reads
+    :meth:`health` each step to score replicas and route around trouble.
     """
 
     def __init__(
@@ -230,6 +237,7 @@ class RAGServeEngine:
         shed_policy: Optional[str] = None,
         default_deadline_s: Optional[float] = None,
         now_fn=time.monotonic,
+        sleep_fn=time.sleep,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
@@ -292,6 +300,9 @@ class RAGServeEngine:
             default_deadline_s = _env_float("RGL_DEADLINE")
         self.default_deadline_s = default_deadline_s
         self._now = now_fn
+        # the prefetcher shares the engine's clock pair so retry backoff,
+        # timeout deadlines, and readiness polling are fully clock-injectable
+        # (chaos tests drive a virtual clock and never wall-sleep)
         self.prefetcher = AdmissionPrefetcher(
             pipeline, self.cache,
             wave_size=1 if self.admission == "continuous" else slots,
@@ -299,6 +310,8 @@ class RAGServeEngine:
             retrieval_timeout_s=retrieval_timeout_s,
             max_retries=max_retries,
             retry_backoff_s=retry_backoff_s,
+            now_fn=now_fn,
+            sleep_fn=sleep_fn,
         )
         self.pending: deque = deque()
         self._inflight: dict = {}  # admission ticket -> RAGRequest
@@ -395,10 +408,14 @@ class RAGServeEngine:
         still handed back by the next ``step()``.  Malformed requests raise
         ``ValueError`` and never enter the system."""
         self._validate(req)
-        deadline = req.deadline_s if req.deadline_s is not None \
-            else self.default_deadline_s
-        if deadline is not None:
-            req.deadline_at = self._now() + float(deadline)
+        if req.deadline_at is None:
+            # a request arriving with deadline_at already pinned (a router
+            # failover re-dispatch) keeps it: re-submitting must never
+            # restart the deadline budget
+            deadline = req.deadline_s if req.deadline_s is not None \
+                else self.default_deadline_s
+            if deadline is not None:
+                req.deadline_at = self._now() + float(deadline)
         if self.max_pending and len(self.pending) >= self.max_pending:
             if self.shed_policy == "reject":
                 self._shed(req, "queue full (shed_policy=reject)")
@@ -663,6 +680,32 @@ class RAGServeEngine:
                 return done
         done.extend(self.abort(reason=f"drain gave up after {max_steps} steps"))
         return done
+
+    def health(self) -> dict:
+        """Cheap health/load snapshot for a fronting router — raw counters
+        only, no derived stats (``stats()`` is the full surface).  The fault
+        counters are cumulative; the router scores health on their *deltas*
+        between steps (a climbing counter, not a large one, is the signal).
+        """
+        p = self.prefetcher
+        return {
+            # fault signals (cumulative)
+            "retries": p.retries,
+            "timeouts": p.timeouts,
+            "retrieval_failures": p.failures,
+            "failed": self.failed_count,
+            "degraded": self.degraded_count,
+            "stale_served": self.stale_served,
+            "shed": self.shed_count,
+            # load signals (instantaneous)
+            "pending": len(self.pending),
+            "inflight_waves": p.in_flight,
+            "inflight_requests": p.in_flight_requests,
+            "admitted": len(self._inflight),
+            "live_slots": int(self.engine.live.sum()),
+            "free_slots": self.engine.free_slots,
+            "queued": len(self.engine.queue),
+        }
 
     def stats(self) -> dict:
         s = self.cache.stats()

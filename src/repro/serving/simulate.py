@@ -34,6 +34,26 @@ reproducibly testable on CPU:
 ``fails_per_row`` bounds how many dispatches a faulty row poisons before it
 heals (None = permanent), which is what makes bounded-retry success paths
 and retry-exhaustion ladder paths separately testable.
+
+:class:`FaultyReplica` lifts fault injection one level up, to the **replica
+fault domain**: it wraps a whole ``RAGServeEngine`` and makes ``step()``
+itself fail on a seeded step schedule —
+
+* ``crash`` — ``step()`` raises :class:`ReplicaFault` from ``crash_step``
+  on, forever (a dead process / lost host),
+* ``flap``  — ``step()`` raises over ``[crash_step, heal_step)`` and then
+  works again (a restarting process; the router's revival probe is what
+  brings it back into rotation),
+* ``grey``  — ``step()`` works but each call pays an injected ``slow_s``
+  delay (a degraded-but-alive host; pair it with a
+  :class:`FaultyRetrieval`-wrapped pipeline on that one replica so its
+  fault counters climb and the router's health scoring can see it).
+
+Everything else (submit/abort/stats/...) passes through to the wrapped
+engine, so :class:`repro.serving.router.ReplicaRouter` drives a
+``FaultyReplica`` exactly like a healthy replica until the schedule fires.
+All clocks are injectable (``sleep_fn``/``now_fn``) so chaos tests never
+wall-sleep.
 """
 from __future__ import annotations
 
@@ -47,6 +67,10 @@ import numpy as np
 
 class RetrievalFault(RuntimeError):
     """An injected retrieval failure (see :class:`FaultyRetrieval`)."""
+
+
+class ReplicaFault(RuntimeError):
+    """An injected replica-level failure (see :class:`FaultyReplica`)."""
 
 
 class LazyHostArray:
@@ -129,11 +153,15 @@ class DelayedRetrieval:
 
     def __init__(self, inner, cost_s: float,
                  events: Optional[list] = None,
-                 cost_fn: Optional[Callable[[np.ndarray], float]] = None):
+                 cost_fn: Optional[Callable[[np.ndarray], float]] = None,
+                 now_fn: Callable[[], float] = time.perf_counter,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         self.inner = inner
         self.cost_s = cost_s
         self.events = events
         self.cost_fn = cost_fn
+        self.now_fn = now_fn
+        self.sleep_fn = sleep_fn
         self.dispatches = 0
 
     def __getattr__(self, name):
@@ -144,7 +172,7 @@ class DelayedRetrieval:
             query_embs, batch_size=batch_size, encoder=encoder
         )
         self.dispatches += 1
-        now = time.perf_counter()
+        now = self.now_fn()
         if self.events is not None:
             self.events.append(("launch", now))
         if self.cost_fn is not None:
@@ -155,13 +183,14 @@ class DelayedRetrieval:
         ready_at = now + cost
         # force the real device arrays NOW (the tiny graph's true cost is
         # negligible) and re-wrap as host arrays gated on the deadline
+        kw = dict(sleep=self.sleep_fn, now=self.now_fn)
         lazy = _LazySubgraph(
             nodes=LazyHostArray(np.asarray(sub.nodes), ready_at,
-                                events=self.events),
-            mask=LazyHostArray(np.asarray(sub.mask), ready_at),
-            dist=LazyHostArray(np.asarray(sub.dist), ready_at),
+                                events=self.events, **kw),
+            mask=LazyHostArray(np.asarray(sub.mask), ready_at, **kw),
+            dist=LazyHostArray(np.asarray(sub.dist), ready_at, **kw),
         )
-        return lazy, LazyHostArray(np.asarray(seeds), ready_at), n_valid
+        return lazy, LazyHostArray(np.asarray(seeds), ready_at, **kw), n_valid
 
 
 class FaultyRetrieval:
@@ -198,7 +227,9 @@ class FaultyRetrieval:
                  cost_s: float = 0.0,
                  fault_types: tuple = FAULT_TYPES,
                  fails_per_row: Optional[int] = None,
-                 events: Optional[list] = None):
+                 events: Optional[list] = None,
+                 now_fn: Callable[[], float] = time.perf_counter,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         if not 0.0 <= fault_rate <= 1.0:
             raise ValueError(f"fault_rate must be in [0, 1], got {fault_rate}")
         unknown = [t for t in fault_types if t not in self.FAULT_TYPES]
@@ -214,6 +245,8 @@ class FaultyRetrieval:
         self.fault_types = tuple(fault_types)
         self.fails_per_row = fails_per_row
         self.events = events
+        self.now_fn = now_fn
+        self.sleep_fn = sleep_fn
         self.dispatches = 0
         self.injected = {t: 0 for t in self.FAULT_TYPES}
         self._fail_left: dict = {}  # row key -> remaining faulty dispatches
@@ -262,7 +295,7 @@ class FaultyRetrieval:
             q = q[None]
         self.dispatches += 1
         faults = [(q[i], self._active_fault(q[i])) for i in range(q.shape[0])]
-        now = time.perf_counter()
+        now = self.now_fn()
         if self.events is not None:
             self.events.append(("launch", now))
 
@@ -308,9 +341,72 @@ class FaultyRetrieval:
                 f"injected force fault ({len(force_rows)} row(s))"
             )
 
+        kw = dict(sleep=self.sleep_fn, now=self.now_fn)
         lazy = _LazySubgraph(
-            nodes=LazyHostArray(nodes, ready_at, events=self.events, exc=exc),
-            mask=LazyHostArray(mask, ready_at, exc=exc),
-            dist=LazyHostArray(dist, ready_at, exc=exc),
+            nodes=LazyHostArray(nodes, ready_at, events=self.events, exc=exc,
+                                **kw),
+            mask=LazyHostArray(mask, ready_at, exc=exc, **kw),
+            dist=LazyHostArray(dist, ready_at, exc=exc, **kw),
         )
-        return lazy, LazyHostArray(seeds_np, ready_at, exc=exc), n_valid
+        return lazy, LazyHostArray(seeds_np, ready_at, exc=exc, **kw), n_valid
+
+
+class FaultyReplica:
+    """Replica-level fault domain: a ``RAGServeEngine`` whose ``step()``
+    fails on a seeded step schedule (see the module docstring for the three
+    modes).  Everything but ``step()`` delegates to the wrapped engine, so a
+    router drives this exactly like a healthy replica — and ``abort()`` on a
+    crashed replica still works (abort is host-side reconciliation; the
+    injected fault only poisons the step path, like a wedged event loop over
+    an otherwise reachable process).
+
+    ``steps`` counts every ``step()`` *attempt* (faulting calls included),
+    so a ``flap`` replica heals after ``heal_step - crash_step`` failed
+    attempts regardless of how often the router probes it.
+    """
+
+    MODES = ("crash", "flap", "grey")
+
+    def __init__(self, engine, *, mode: str = "crash", crash_step: int = 0,
+                 heal_step: Optional[int] = None, slow_s: float = 0.0,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}, got {mode!r}")
+        if mode == "flap":
+            if heal_step is None or heal_step <= crash_step:
+                raise ValueError(
+                    f"flap needs heal_step > crash_step, got "
+                    f"crash_step={crash_step} heal_step={heal_step}"
+                )
+        elif heal_step is not None:
+            raise ValueError(f"heal_step only applies to flap, not {mode!r}")
+        self.engine = engine
+        self.mode = mode
+        self.crash_step = int(crash_step)
+        self.heal_step = None if heal_step is None else int(heal_step)
+        self.slow_s = float(slow_s)
+        self.sleep_fn = sleep_fn
+        self.steps = 0  # step() attempts, faulting ones included
+        self.faults_injected = 0
+
+    def __getattr__(self, name):
+        return getattr(self.engine, name)
+
+    def _faulting(self, at: int) -> bool:
+        if self.mode == "grey":
+            return False
+        if at < self.crash_step:
+            return False
+        return self.heal_step is None or at < self.heal_step
+
+    def step(self) -> list:
+        at = self.steps
+        self.steps += 1
+        if self._faulting(at):
+            self.faults_injected += 1
+            raise ReplicaFault(
+                f"injected {self.mode} fault at replica step {at}"
+            )
+        if self.mode == "grey" and self.slow_s > 0 and at >= self.crash_step:
+            self.sleep_fn(self.slow_s)  # degraded-but-alive host
+        return self.engine.step()

@@ -1,0 +1,108 @@
+"""Tests for the benchmark envelope checker (benchmarks/check_envelopes.py)
+plus the tier-1 guard that the committed envelopes actually pass against the
+committed BENCH_*.json artifacts — so an envelope edit that would fail the
+nightly job is caught on the PR that makes it."""
+import json
+import os
+
+import pytest
+
+from benchmarks.check_envelopes import check_all, check_report, resolve
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------- resolve
+
+def test_resolve_dotted_and_indexed_paths():
+    doc = {
+        "a": {"b": 1.5},
+        "results": [{"speedup": 2.0}, {"speedup": 3.0, "deep": {"x": 7}}],
+    }
+    assert resolve(doc, "a.b") == 1.5
+    assert resolve(doc, "results[0].speedup") == 2.0
+    assert resolve(doc, "results[1].deep.x") == 7
+
+
+def test_resolve_failures_are_loud():
+    doc = {"a": {"b": 1}, "xs": [1, 2]}
+    with pytest.raises(KeyError):
+        resolve(doc, "a.nope")
+    with pytest.raises(IndexError):
+        resolve(doc, "xs[5]")
+    with pytest.raises(TypeError):
+        resolve(doc, "a[0]")  # [i] into a dict
+
+
+# ----------------------------------------------------------- check_report
+
+def test_check_report_min_max_and_clean():
+    report = {"ratio": 1.7, "counts": {"stranded": 0, "completed": 24}}
+    rules = [
+        {"path": "ratio", "min": 1.5},
+        {"path": "counts.stranded", "max": 0},
+        {"path": "counts.completed", "min": 24, "max": 24},
+    ]
+    assert check_report(report, rules) == []
+
+    bad = check_report(report, [{"path": "ratio", "min": 2.0}])
+    assert len(bad) == 1 and "< min 2" in bad[0]
+
+    bad = check_report(report, [{"path": "counts.completed", "max": 20}])
+    assert len(bad) == 1 and "> max 20" in bad[0]
+
+
+def test_check_report_flags_bad_rules_not_silently_passes():
+    report = {"ok": 1, "name": "hi", "flag": True}
+    # unresolvable path, non-numeric value, rule with no bounds: all of
+    # these are envelope-authoring mistakes and must FAIL, not skip
+    bad = check_report(report, [
+        {"path": "missing.key", "min": 0},
+        {"path": "name", "min": 0},
+        {"path": "flag", "min": 0},
+        {"path": "ok"},
+    ])
+    assert len(bad) == 4
+    assert any("unresolvable" in v for v in bad)
+    assert any("not a number" in v for v in bad)
+    assert any("neither min nor max" in v for v in bad)
+
+
+# -------------------------------------------------------------- check_all
+
+def test_check_all_missing_artifact(tmp_path):
+    env = {"_comment": "ignored",
+           "BENCH_gone.json": [{"path": "x", "min": 0}]}
+    violations, checked, missing = check_all(env, str(tmp_path))
+    assert missing == ["BENCH_gone.json"]
+    assert checked == []
+    assert len(violations) == 1 and "missing" in violations[0]
+
+    violations, _, missing = check_all(env, str(tmp_path),
+                                       allow_missing=True)
+    assert violations == [] and missing == ["BENCH_gone.json"]
+
+
+def test_check_all_reads_and_labels(tmp_path):
+    (tmp_path / "BENCH_x.json").write_text(json.dumps({"v": 0.5}))
+    env = {"BENCH_x.json": [{"path": "v", "min": 0.9}]}
+    violations, checked, _ = check_all(env, str(tmp_path))
+    assert checked == ["BENCH_x.json"]
+    assert len(violations) == 1
+    assert violations[0].startswith("BENCH_x.json: v = 0.5")
+
+
+# ------------------------------------------- committed artifacts vs rules
+
+def test_committed_envelopes_pass_against_committed_artifacts():
+    """The repo's own full-run BENCH_*.json artifacts must satisfy the
+    committed envelopes — the same check the nightly job runs on fresh
+    artifacts.  Keeps envelopes.json honest: a bound nobody could meet,
+    or a typo'd path, fails here on the PR that introduced it."""
+    with open(os.path.join(REPO, "benchmarks", "envelopes.json")) as f:
+        env = json.load(f)
+    violations, checked, missing = check_all(env, REPO)
+    assert not missing, f"envelope names missing artifacts: {missing}"
+    assert checked, "no artifacts checked — envelopes.json empty?"
+    assert not violations, "committed artifacts violate committed " \
+        f"envelopes:\n" + "\n".join(violations)

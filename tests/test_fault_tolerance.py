@@ -12,8 +12,8 @@ from repro.core import BruteIndex, GraphTokenizer, PipelineConfig, \
 from repro.graph import csr_to_ell, generators
 from repro.models.transformer import TransformerConfig, model as tm
 from repro.serving import (
-    FaultyRetrieval, RAGRequest, RAGServeEngine, RetrievalCache,
-    RetrievalFault,
+    CachedRetrieval, DelayedRetrieval, FaultyRetrieval, RAGRequest,
+    RAGServeEngine, RetrievalCache, RetrievalFault,
 )
 
 N_NODES = 120
@@ -388,6 +388,68 @@ def test_mid_flight_fault_then_fresh_workload(stack):
     assert second.done and not second.degraded
     assert second.retrieved_nodes.size > 0
     _assert_clean(eng)
+
+
+def test_abort_mid_launch_continuous_wave(stack):
+    """abort() invoked while continuous-admission waves sit between launch
+    and collect: every layer reconciles (no leaked slots, waves, or
+    in-flight cache keys) and the engine serves a fresh workload after."""
+    g, pipe, cfg, params = stack
+    clock = [0.0]
+    sleep = lambda s: clock.__setitem__(0, clock[0] + s)  # noqa: E731
+    feat0 = np.asarray(g.node_feat[0], np.float32)
+
+    def cost(row):  # row 0 lands instantly; every other row never does
+        return 0.0 if np.allclose(row, feat0) else np.inf
+
+    delayed = DelayedRetrieval(pipe, cost_s=0.0, cost_fn=cost,
+                               now_fn=lambda: clock[0], sleep_fn=sleep)
+    eng = RAGServeEngine(delayed, params, cfg, slots=SLOTS,
+                         cache_len=CACHE_LEN, prefetch=True,
+                         admission="continuous",
+                         now_fn=lambda: clock[0], sleep_fn=sleep)
+    for u in range(3):
+        eng.submit(_req(g, u, uid=u))
+    eng.step()
+    # uid 0's wave collected + admitted (arena non-idle); uids 1-2 are
+    # launched-but-uncollected, their keys registered in flight
+    assert int(eng.engine.live.sum()) == 1
+    assert eng.prefetcher.in_flight == 2
+    assert eng.cache.inflight_count == 2
+    out = {r.uid: r for r in eng.abort(reason="mid-launch abort")}
+    assert set(out) == {0, 1, 2}  # exactly one terminal per request
+    assert all(r.failed or r.shed for r in out.values())
+    _assert_clean(eng)
+    # the same engine serves a fresh (instant-retrieval) workload cleanly
+    eng.submit(_req(g, 0, uid=9))
+    done = eng.run_to_completion()
+    assert len(done) == 1 and done[0].done
+    _assert_clean(eng)
+
+
+def test_cache_stale_counters(stack):
+    """peek_stale is observable at the cache tier: stale_hits counts
+    resident (even TTL-expired) fallbacks, stale_misses counts empty-handed
+    lookups — neither touches the hit/miss counters or recency."""
+    g, *_ = stack
+    now = [0.0]
+    cache = RetrievalCache(capacity=4, ttl=10.0, now_fn=lambda: now[0])
+    emb = np.asarray(g.node_feat[0])
+    assert cache.peek_stale(emb) is None
+    s = cache.stats()
+    assert s["stale_misses"] == 1 and s["stale_hits"] == 0
+    entry = CachedRetrieval(
+        nodes=np.arange(4, dtype=np.int32), mask=np.ones(4, bool),
+        dist=np.zeros(4, np.int32), seeds=np.arange(2, dtype=np.int32),
+    )
+    cache.put(emb, entry)
+    assert cache.peek_stale(emb) is entry
+    now[0] = 100.0  # TTL-expired: invisible to get, served by peek_stale
+    assert cache.get(emb) is None
+    assert cache.peek_stale(emb) is entry
+    s = cache.stats()
+    assert s["stale_hits"] == 2 and s["stale_misses"] == 1
+    assert s["hits"] == 0 and s["misses"] == 1  # peeks counted separately
 
 
 # -------------------------------------------------------------- chaos soak ----
