@@ -26,6 +26,10 @@ Prints ``name,us_per_call,derived`` CSV blocks:
                           health-aware router, plus crash-mid-run failover
                           vs the naive (stranding) router (also writes
                           BENCH_multi_replica.json)
+  * prefix_sharing      — block-level prefix sharing on a repeated-query
+                          workload: admission latency + prefill rows +
+                          peak pool residency, share on vs off (also
+                          writes BENCH_prefix_sharing.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 
@@ -45,7 +49,7 @@ def main() -> None:
     ap.add_argument("--only", choices=[
         "retrieval", "completion", "abstract", "kernels", "serving",
         "async_serving", "sharding", "scaling", "spec_decode", "paged_kv",
-        "fault_tolerance", "multi_replica",
+        "fault_tolerance", "multi_replica", "prefix_sharing",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
@@ -64,8 +68,8 @@ def main() -> None:
 
     from benchmarks import (
         abstract_generation, async_serving, fault_tolerance, index_sharding,
-        kernels, modality_completion, multi_replica, paged_kv, rag_serving,
-        retrieval_scaling, spec_decode,
+        kernels, modality_completion, multi_replica, paged_kv,
+        prefix_sharing, rag_serving, retrieval_scaling, spec_decode,
     )
 
     print("name,us_per_call,derived")
@@ -195,6 +199,23 @@ def main() -> None:
               f"ratio_vs_2healthy={c['goodput_ratio_vs_2healthy']:.2f}x;"
               f"redispatched={fo['redispatched']};"
               f"naive_stranded={na['stranded']}")
+    if args.only in (None, "prefix_sharing"):
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=8, n_unique=2, slots=3,
+                 max_new=6, repeats=1) if smoke else
+            dict(n_nodes=1000, n_requests=16, n_unique=2, slots=4,
+                 repeats=2))
+        rep = prefix_sharing.run(**kw)
+        prefix_sharing.write_json(rep, bench_path("prefix_sharing"))
+        adm, res = rep["admission"], rep["residency"]
+        print(f"prefix_sharing/admission,{adm['admit_on_s'] * 1e6:.0f},"
+              f"speedup={adm['admit_speedup']:.2f}x;"
+              f"shared_frac={adm['shared_admit_frac']:.2f};"
+              f"prefill_rows={adm['prefill_rows_off']}->"
+              f"{adm['prefill_rows_on']}")
+        print(f"prefix_sharing/residency,{res['high_water_on_blocks']:.0f},"
+              f"frac_vs_unshared={res['residency_frac_vs_unshared']:.2f};"
+              f"pinned={res['pinned_blocks_final']}")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,12 @@ def _print_decode_stats(ds: dict) -> None:
         print(f"  paged KV: block={ds['block_size']} tokens, "
               f"pool={ds['pool_blocks']} blocks, "
               f"high water {ds['pool_high_water_blocks']} blocks")
+    if ds.get("prefix_share"):
+        print(f"  prefix share: {ds['kv_shared_admits']} shared admits / "
+              f"{ds['kv_reused_tokens']} prompt tokens reused, "
+              f"{ds['kv_cow_copies']} COW tail copies, "
+              f"{ds['kv_pins']} pins ({ds['kv_pinned_blocks']} blocks held, "
+              f"{ds['kv_releases']} released)")
     if ds.get("truncations"):
         print(f"  truncations: {ds['truncations']} request(s) retired by KV "
               f"exhaustion before reaching max_new_tokens")
@@ -125,6 +131,7 @@ def _serve_rag(cfg, args) -> None:
                      paged_kv=args.paged_kv,
                      kv_block_size=args.kv_block,
                      kv_pool_blocks=args.pool_blocks,
+                     prefix_share=args.prefix_share,
                      retrieval_timeout_s=args.retrieval_timeout,
                      max_retries=args.retries,
                      retry_backoff_s=args.retry_backoff,
@@ -280,6 +287,13 @@ def main():
                          "fixed-size blocks; slots return blocks the step "
                          "they retire (--no-paged-kv forces the contiguous "
                          "arena; default honors RGL_PAGED_KV)")
+    ap.add_argument("--prefix-share", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="prefix-shared paged KV: pin hot retrieval-cache "
+                         "entries' prefilled prompt blocks and alias them "
+                         "into later identical prompts (refcounted "
+                         "copy-on-write; needs --paged-kv; default honors "
+                         "RGL_PREFIX_SHARE)")
     ap.add_argument("--kv-block", type=int, default=None,
                     help="tokens per KV block (must divide cache_len; "
                          "default: largest divisor <= 16, or RGL_KV_BLOCK)")

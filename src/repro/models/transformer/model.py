@@ -541,6 +541,14 @@ class PagedKVCache:
     host; the serving engine replays the same arithmetic on host mirrors
     (cursor → blocks needed → stack depth), so pool-exhaustion checks are
     host-only and deterministic.
+
+    ``ref`` is the per-pool-block refcount that makes prefix sharing safe:
+    a block's count is the number of holders — table entries across slots
+    plus retrieval-cache pins (:func:`acquire_blocks`).  Allocation pops a
+    block at count 0 and sets it to 1; :func:`free_slot_blocks` /
+    :func:`release_blocks` decrement and push a block back onto the stack
+    only when its count hits zero, so an aliased prompt prefix outlives
+    any single holder.
     """
 
     k: jnp.ndarray  # (L, P, KV, dh) — int8 when quantized
@@ -550,6 +558,7 @@ class PagedKVCache:
     table: jnp.ndarray  # (B, max_blocks) pool block per logical block, -1 none
     free: jnp.ndarray  # (pool_blocks,) free-list stack storage
     n_free: jnp.ndarray  # () int32 valid stack depth
+    ref: jnp.ndarray  # (pool_blocks,) int32 holders per block (0 = free)
     k_scale: object = None  # (L, P, KV) bf16 absmax scales (int8 mode)
     v_scale: object = None
 
@@ -557,7 +566,7 @@ class PagedKVCache:
 jax.tree_util.register_dataclass(
     PagedKVCache,
     data_fields=["k", "v", "pos", "cursor", "table", "free", "n_free",
-                 "k_scale", "v_scale"],
+                 "ref", "k_scale", "v_scale"],
     meta_fields=[],
 )
 
@@ -582,6 +591,7 @@ def init_paged_cache(cfg: TransformerConfig, batch: int, cache_len: int,
         table=jnp.full((batch, m), -1, jnp.int32),
         free=jnp.arange(pool_blocks, dtype=jnp.int32),
         n_free=jnp.asarray(pool_blocks, jnp.int32),
+        ref=jnp.zeros((pool_blocks,), jnp.int32),
         k_scale=scales,
         v_scale=(None if scales is None else scales),
     )
@@ -597,49 +607,180 @@ def block_rows(table: jnp.ndarray, block_size: int) -> jnp.ndarray:
     return jnp.where(rows >= 0, rows, 0).reshape(b, m * block_size)
 
 
-def alloc_blocks(table, free, n_free, target, live, max_new: int):
+def alloc_blocks(table, free, n_free, ref, target, live, max_new: int):
     """Grow each live slot's allocated-block prefix to ``target[b]`` blocks
     by popping from the free stack — at most ``max_new`` new blocks per slot
     (a static bound, so the pop unrolls to ``max_new`` masked writes).
+    Every popped block's refcount is set to 1 (its sole holder is the slot
+    whose table entry now names it).
 
     The caller guarantees ``sum(need) <= n_free``: the serving engine
     retires slots host-side (``truncated=True``) before dispatch whenever
     the pool cannot cover the step, so no in-jit exhaustion handling — and
-    no host sync — is ever needed.  Dead slots (``~live``) never allocate,
-    even though their cursors drift between admissions.
+    no host sync — is ever needed (the engine's ``RGL_KV_DEBUG`` guard
+    raises host-side if the invariant is ever violated; in-jit the
+    violation would silently alias stale stack entries).  Dead slots
+    (``~live``) never allocate, even though their cursors drift between
+    admissions.
     """
     b, m = table.shape
+    p = free.shape[0]
     n_tab = jnp.sum(table >= 0, axis=1).astype(jnp.int32)
     need = jnp.where(live, jnp.clip(target - n_tab, 0, max_new), 0)
     offs = (jnp.cumsum(need) - need).astype(jnp.int32)  # exclusive prefix sum
     cols = jnp.arange(m, dtype=jnp.int32)[None, :]
     for j in range(max_new):
         take = j < need  # (B,)
-        src = jnp.clip(n_free - 1 - offs - j, 0, free.shape[0] - 1)
+        src = jnp.clip(n_free - 1 - offs - j, 0, p - 1)
         blk = free[src]  # (B,) popped block ids (garbage where ~take)
         write = take[:, None] & (cols == (n_tab + j)[:, None])
         table = jnp.where(write, blk[:, None], table)
-    return table, (n_free - jnp.sum(need)).astype(jnp.int32)
+        ref = ref.at[jnp.where(take, blk, p)].set(1, mode="drop")
+    return table, (n_free - jnp.sum(need)).astype(jnp.int32), ref
+
+
+def _release_refs(free, n_free, ref, drops):
+    """Decrement per-block refcounts by ``drops`` (a (P,) count of holds
+    being dropped per pool block) and push every block whose count hits
+    zero back onto the free stack, in ascending block-id order.  The
+    per-POOL-BLOCK accounting (rather than per-table-entry) makes the push
+    set duplicate-free by construction even when several retiring holders
+    reference the same shared block."""
+    p = free.shape[0]
+    ref = ref - drops
+    push = (drops > 0) & (ref <= 0)
+    npush = jnp.cumsum(push.astype(jnp.int32))
+    dst = jnp.where(push, n_free + npush - 1, p)
+    free = free.at[dst].set(jnp.arange(p, dtype=jnp.int32), mode="drop")
+    return free, (n_free + npush[-1]).astype(jnp.int32), jnp.maximum(ref, 0)
 
 
 @jax.jit
 def free_slot_blocks(cache: PagedKVCache, mask) -> PagedKVCache:
-    """Push every masked slot's blocks back onto the free stack and clear
-    its table/pos/cursor — ONE small dispatch per retirement step, batched
-    over however many slots finished together."""
+    """Drop every masked slot's hold on its blocks and clear its
+    table/pos/cursor — ONE small dispatch per retirement step, batched over
+    however many slots finished together.  A block returns to the free
+    stack only when its refcount hits zero, so prompt-prefix blocks shared
+    with other slots (or pinned by the retrieval cache) survive the
+    retirement."""
     table = cache.table
+    p = cache.free.shape[0]
     valid = (mask[:, None] & (table >= 0)).reshape(-1)
-    ids = table.reshape(-1)
-    npush = jnp.cumsum(valid.astype(jnp.int32))
-    dst = jnp.where(valid, cache.n_free + npush - 1, cache.free.shape[0])
+    ids = jnp.where(valid, table.reshape(-1), p)
+    drops = jnp.zeros((p,), jnp.int32).at[ids].add(1, mode="drop")
+    free, n_free, ref = _release_refs(
+        cache.free, cache.n_free, cache.ref, drops
+    )
     return dataclasses.replace(
         cache,
-        free=cache.free.at[dst].set(ids, mode="drop"),
-        n_free=(cache.n_free + npush[-1]).astype(jnp.int32),
+        free=free,
+        n_free=n_free,
+        ref=ref,
         table=jnp.where(mask[:, None], -1, table),
         pos=jnp.where(mask[:, None], -1, cache.pos),
         cursor=jnp.where(mask, 0, cache.cursor),
     )
+
+
+@jax.jit
+def acquire_blocks(cache: PagedKVCache, ids) -> PagedKVCache:
+    """Add one hold per listed pool block (``ids`` int32, -1 entries
+    ignored) — the retrieval-cache pin / pending-share side of the
+    refcount protocol."""
+    p = cache.free.shape[0]
+    ref = cache.ref.at[jnp.where(ids >= 0, ids, p)].add(1, mode="drop")
+    return dataclasses.replace(cache, ref=ref)
+
+
+@jax.jit
+def release_blocks(cache: PagedKVCache, ids) -> PagedKVCache:
+    """Drop one hold per listed pool block (``ids`` int32, -1 entries
+    ignored), pushing blocks that hit refcount zero back onto the free
+    stack — the eviction side of :func:`acquire_blocks`."""
+    p = cache.free.shape[0]
+    drops = jnp.zeros((p,), jnp.int32).at[
+        jnp.where(ids >= 0, ids, p)
+    ].add(1, mode="drop")
+    free, n_free, ref = _release_refs(
+        cache.free, cache.n_free, cache.ref, drops
+    )
+    return dataclasses.replace(cache, free=free, n_free=n_free, ref=ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def adopt_prefix_blocks(cache: PagedKVCache, cur_tok, mask, src_table,
+                        length, tail_src, first, block_size: int):
+    """Map an already-prefilled prompt's pool blocks into each masked
+    slot's table instead of re-running prefill.
+
+    For slot b with ``mask[b]``: alias the ``length[b] // bs`` full leading
+    blocks from ``src_table[b]`` (the holders' refcounts were bumped by the
+    engine before this dispatch — the slot takes those holds over), and
+    when the prompt ends mid-block (``tail_src[b] >= 0`` names the donor's
+    partial tail block) pop a fresh block, copy the tail block's K/V rows
+    into it, and point the table at the copy — copy-on-write at the first
+    divergent write position, done eagerly because the very next decode
+    write for this slot lands inside that block.  Rows past the prompt ride
+    along in the copy but carry ``pos == -1`` until overwritten, so the
+    masked attention never sees them.  The one-dispatch hold the engine
+    took on each copied source block is dropped here (pushing it back if
+    the donor entry was released mid-flight).
+
+    ``pos``/``cursor`` pin to the prompt length and ``cur_tok`` takes
+    ``first`` (the donor prefill's recorded argmax), so decode proceeds
+    exactly as if this slot had been admitted through the prefill path —
+    greedy decode only reads KV, and the aliased rows are bitwise the
+    donor's, so outputs are bitwise identical to unshared admission.
+    """
+    bs = block_size
+    b, sc = cache.pos.shape
+    p_rows = cache.k.shape[1]
+    p = cache.free.shape[0]
+    m = cache.table.shape[1]
+    nfull = jnp.where(mask, length // bs, 0)
+    has_tail = mask & (tail_src >= 0)
+    need = has_tail.astype(jnp.int32)
+    offs = (jnp.cumsum(need) - need).astype(jnp.int32)
+    src_i = jnp.clip(cache.n_free - 1 - offs, 0, p - 1)
+    fresh = cache.free[src_i]  # (B,) popped tail copies (garbage where ~take)
+    n_free = (cache.n_free - jnp.sum(need)).astype(jnp.int32)
+    ref = cache.ref.at[jnp.where(has_tail, fresh, p)].set(1, mode="drop")
+    # drop the engine's one-dispatch hold on each copied source block
+    drops = jnp.zeros((p,), jnp.int32).at[
+        jnp.where(has_tail, tail_src, p)
+    ].add(1, mode="drop")
+    free, n_free, ref = _release_refs(cache.free, n_free, ref, drops)
+    cols = jnp.arange(m, dtype=jnp.int32)[None, :]
+    t = jnp.where(cols < nfull[:, None], src_table, -1)
+    t = jnp.where((cols == nfull[:, None]) & has_tail[:, None],
+                  fresh[:, None], t)
+    table = jnp.where(mask[:, None], t, cache.table)
+    # COW row copy: all bs rows of each tail block, batched over slots
+    off = jnp.arange(bs, dtype=jnp.int32)[None, :]
+    srows = (jnp.clip(tail_src, 0, p - 1) * bs)[:, None] + off  # (B, bs)
+    drows = jnp.where(has_tail[:, None], fresh[:, None] * bs + off,
+                      p_rows).reshape(-1)
+
+    def cpy(pool):
+        if pool is None:
+            return None
+        return pool.at[:, drows].set(pool[:, srows.reshape(-1)], mode="drop")
+
+    spos = jnp.arange(sc, dtype=jnp.int32)[None, :]
+    pos_new = jnp.where(spos < length[:, None], spos, -1)
+    new_cache = PagedKVCache(
+        k=cpy(cache.k),
+        v=cpy(cache.v),
+        pos=jnp.where(mask[:, None], pos_new, cache.pos),
+        cursor=jnp.where(mask, length.astype(jnp.int32), cache.cursor),
+        table=table,
+        free=free,
+        n_free=n_free,
+        ref=ref,
+        k_scale=cpy(cache.k_scale),
+        v_scale=cpy(cache.v_scale),
+    )
+    return new_cache, jnp.where(mask, first, cur_tok)
 
 
 def paged_decode_step(params, cache: PagedKVCache, token, live,
@@ -665,8 +806,8 @@ def paged_decode_step(params, cache: PagedKVCache, token, live,
     cur = cache.cursor  # (B,) position of the token being processed
     # allocate the block holding position `cur` (at most 1 new per step)
     target = jnp.where(live, cur // bs + 1, 0)
-    table, n_free = alloc_blocks(
-        cache.table, cache.free, cache.n_free, target, live, 1
+    table, n_free, ref = alloc_blocks(
+        cache.table, cache.free, cache.n_free, cache.ref, target, live, 1
     )
     rows = block_rows(table, bs)  # (B, Sc)
     ent = jnp.take_along_axis(
@@ -727,7 +868,7 @@ def paged_decode_step(params, cache: PagedKVCache, token, live,
     new_pos = jnp.where(slot_mask, cur[:, None], cache.pos)
     new_cache = PagedKVCache(k=kc, v=vc, pos=new_pos, cursor=cur + 1,
                              table=table, free=cache.free, n_free=n_free,
-                             k_scale=ks, v_scale=vs)
+                             ref=ref, k_scale=ks, v_scale=vs)
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = x[:, 0].astype(jnp.float32) @ params["head"].astype(jnp.float32)
     return logits, new_cache
@@ -766,8 +907,9 @@ def paged_verify_window(params, cache: PagedKVCache, tokens, live,
     hi = jnp.minimum(cur + w, sc)
     target = jnp.where(live, (hi + bs - 1) // bs, 0)
     max_new = min(m, (w + bs - 1) // bs + 1)
-    table, n_free = alloc_blocks(
-        cache.table, cache.free, cache.n_free, target, live, max_new
+    table, n_free, ref = alloc_blocks(
+        cache.table, cache.free, cache.n_free, cache.ref, target, live,
+        max_new
     )
     rows = block_rows(table, bs)  # (B, Sc)
     ent = jnp.take_along_axis(
@@ -835,7 +977,7 @@ def paged_verify_window(params, cache: PagedKVCache, tokens, live,
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, W)
     new_cache = PagedKVCache(k=kc, v=vc, pos=new_pos, cursor=cache.cursor,
                              table=table, free=cache.free, n_free=n_free,
-                             k_scale=ks, v_scale=vs)
+                             ref=ref, k_scale=ks, v_scale=vs)
     return greedy, new_cache
 
 

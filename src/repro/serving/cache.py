@@ -52,12 +52,31 @@ POLICIES = ("lru", "lfu", "ttl")
 
 @dataclasses.dataclass
 class CachedRetrieval:
-    """One query's retrieval output, materialized on host."""
+    """One query's retrieval output, materialized on host.
+
+    When prefix sharing is on (``RGL_PREFIX_SHARE``), a hot entry may
+    additionally *pin* the paged-KV pool blocks holding the prefilled
+    prompt that this retrieval produced: ``kv_blocks`` names the pool
+    block ids (the pin holds one refcount per block), ``kv_prompt`` the
+    exact token ids those blocks cover (admission re-validates against
+    it), ``kv_first_tok`` the prefill's recorded argmax, and
+    ``kv_release`` the owning engine's release hook — called by the cache
+    on eviction/overwrite and by ``reclaim_kv`` under pool pressure, so
+    cache lifetime, not request lifetime, bounds how long prefilled KV
+    stays resident."""
 
     nodes: np.ndarray  # (M,) int32 subgraph node ids (sentinel where ~mask)
     mask: np.ndarray  # (M,) bool
     dist: np.ndarray  # (M,) int32 hop distances
     seeds: np.ndarray  # (S,) int32 seed node ids
+    # prefilled-KV pin (engine-owned; None/defaults when unpinned)
+    kv_blocks: np.ndarray | None = None  # (nblk,) int32 pool block ids
+    kv_len: int = 0  # prompt tokens the pinned blocks cover
+    kv_first_tok: int = -1  # prefill argmax recorded at pin time
+    kv_prompt: np.ndarray | None = None  # (L,) int32 exact pinned prompt
+    kv_owner: object = None  # engine whose pool the block ids index
+    kv_release: object = None  # hook: entry -> blocks returned to the pool
+    cache_key: bytes | None = None  # set by put(); drives is_resident()
 
 
 @dataclasses.dataclass
@@ -67,6 +86,10 @@ class _Slot:
     entry: CachedRetrieval
     hits: int = 0  # per-entry hit count (drives lfu)
     inserted_at: float = 0.0  # ttl expiry + FIFO eviction order
+    # each entry's TTL expiry is counted in stats()["expired"] exactly
+    # once (the first lookup or purge that observes it) — the counter
+    # tracks distinct expiries, not lookups of an expired resident
+    expired_counted: bool = False
 
 
 class RetrievalCache:
@@ -145,11 +168,17 @@ class RetrievalCache:
     def _is_expired(self, slot: _Slot, now: float) -> bool:
         return self.ttl is not None and now - slot.inserted_at > self.ttl
 
+    def _count_expiry(self, slot: _Slot) -> None:
+        if not slot.expired_counted:
+            slot.expired_counted = True
+            self.expired += 1
+
     def _purge_expired(self, now: float) -> None:
         dead = [k for k, s in self._data.items() if self._is_expired(s, now)]
         for k in dead:
-            del self._data[k]
-            self.expired += 1
+            slot = self._data.pop(k)
+            self._count_expiry(slot)
+            self._release_kv(slot.entry)
 
     # -- lookup / insert ------------------------------------------------------
     def get(self, query_emb) -> CachedRetrieval | None:
@@ -159,8 +188,9 @@ class RetrievalCache:
         if slot is not None and self._is_expired(slot, now):
             # expired entries are invisible here but stay resident (until a
             # capacity-pressure purge) so peek_stale can serve them when
-            # live retrieval fails — see the degradation ladder
-            self.expired += 1
+            # live retrieval fails — see the degradation ladder.  The expiry
+            # is counted once per entry, however many lookups observe it.
+            self._count_expiry(slot)
             self.misses += 1
             return None
         if slot is None:
@@ -191,6 +221,14 @@ class RetrievalCache:
         slot = self._data.get(self.key(query_emb))
         return slot.hits if slot is not None else 0
 
+    @staticmethod
+    def _release_kv(entry: CachedRetrieval) -> int:
+        """Release an entry's prefilled-KV pin (if any) as it leaves the
+        cache — eviction, TTL purge, or overwrite — so cache pressure frees
+        pool blocks.  The hook is the owning engine's and idempotent."""
+        rel = getattr(entry, "kv_release", None)
+        return int(rel(entry)) if rel is not None else 0
+
     def _evict_one(self, protect: bytes) -> None:
         # the just-inserted key is never its own victim (else a 0-hit
         # newcomer would be evicted immediately under lfu)
@@ -202,7 +240,7 @@ class RetrievalCache:
             victim = min(pool, key=lambda k: self._data[k].hits)
         else:  # ttl: oldest inserted first (insertion-order FIFO)
             victim = min(pool, key=lambda k: self._data[k].inserted_at)
-        del self._data[victim]
+        self._release_kv(self._data.pop(victim).entry)
         self.evictions += 1
 
     def put(self, query_emb, entry: CachedRetrieval) -> None:
@@ -218,18 +256,76 @@ class RetrievalCache:
             # become the next eviction victim.  ``inserted_at`` DOES
             # refresh — a re-insert carries fresh data, so its TTL window
             # restarts (and ttl-policy eviction treats it as newest).
+            if prev.entry is not entry:
+                self._release_kv(prev.entry)  # displaced entry's pin goes
             self._data[k] = _Slot(entry=entry, inserted_at=now,
                                   hits=prev.hits)
         else:
             self._data[k] = _Slot(entry=entry, inserted_at=now)
+        entry.cache_key = k
         self._data.move_to_end(k)
         if len(self._data) > self.capacity:
             self._purge_expired(now)
         while len(self._data) > self.capacity:
             self._evict_one(protect=k)
 
+    # -- prefilled-KV pins ----------------------------------------------------
+    def is_resident(self, entry: CachedRetrieval) -> bool:
+        """True while ``entry`` is the live occupant of its cache slot —
+        the engine's pin gate, so prompt blocks are never pinned to an
+        entry that eviction (or an overwrite) already displaced (such a pin
+        would leak pool blocks: no future eviction would release it)."""
+        k = getattr(entry, "cache_key", None)
+        if k is None:
+            return False
+        slot = self._data.get(k)
+        return slot is not None and slot.entry is entry
+
+    def kv_pinned_entries(self) -> int:
+        return sum(
+            1 for s in self._data.values()
+            if getattr(s.entry, "kv_blocks", None) is not None
+        )
+
+    def reclaim_kv(self, want_blocks: int, owner=None) -> int:
+        """Release prefilled-KV pins until at least ``want_blocks`` pool
+        blocks have returned to the free stack (or no pins remain) —
+        the engine's pool-pressure hook, called *before* it truncates any
+        live request, so pinned KV is strictly lower-priority than live
+        decode.  Victim order: TTL-expired pins first, then the active
+        policy's eviction order among the rest.  Entries keep their
+        retrieval result — only the KV pin is dropped.  ``owner`` filters
+        to pins held against one engine's pool (a shared cache may carry
+        pins from several replicas)."""
+        if want_blocks <= 0:
+            return 0
+        now = self._now()
+        pinned = [
+            k for k, s in self._data.items()
+            if getattr(s.entry, "kv_blocks", None) is not None
+            and (owner is None or s.entry.kv_owner is owner)
+        ]
+        expired = [k for k in pinned
+                   if self._is_expired(self._data[k], now)]
+        fresh = [k for k in pinned if k not in set(expired)]
+        if self.policy == "lfu":
+            fresh.sort(key=lambda k: self._data[k].hits)
+        elif self.policy == "ttl":
+            fresh.sort(key=lambda k: self._data[k].inserted_at)
+        # lru: dict order is already least-recent-first
+        freed = 0
+        for k in expired + fresh:
+            if freed >= want_blocks:
+                break
+            freed += self._release_kv(self._data[k].entry)
+        return freed
+
     def stats(self) -> dict:
         total = self.hits + self.misses
+        now = self._now()
+        resident = len(self._data)
+        live = sum(1 for s in self._data.values()
+                   if not self._is_expired(s, now))
         return {
             "hits": self.hits,
             "misses": self.misses,
@@ -238,7 +334,14 @@ class RetrievalCache:
             "stale_hits": self.stale_hits,
             "stale_misses": self.stale_misses,
             "policy": self.policy,
-            "size": len(self._data),
+            # resident = entries occupying capacity (including TTL-expired
+            # ones kept for degraded-mode peek_stale); live = entries a
+            # get() could still hit.  "size" keeps its historical meaning
+            # (resident) for existing dashboards.
+            "size": resident,
+            "resident": resident,
+            "live": live,
+            "kv_pinned_entries": self.kv_pinned_entries(),
             "inflight": len(self._inflight),
             "hit_rate": self.hits / total if total else 0.0,
         }

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 from collections import deque
 from typing import Optional
 
@@ -95,6 +96,30 @@ class Request:
     # monotonic admission ticket assigned by the submitting front-end; a
     # stable identity that, unlike id(self), is never reused after GC
     ticket: int = -1
+    # prefix sharing (paged arena + RGL_PREFIX_SHARE, set by the RAG layer):
+    # ``shared_prefix`` names a CachedRetrieval whose pinned prefilled KV
+    # blocks cover this request's exact prompt — admission re-validates and
+    # aliases them instead of running prefill; ``pin_to`` names an entry
+    # that should receive this request's freshly prefilled prompt blocks as
+    # its pin (the donor side).  Both are best-effort: a released pin or a
+    # prompt mismatch falls back to the ordinary prefill path.
+    shared_prefix: object = None
+    pin_to: object = None
+
+
+@dataclasses.dataclass
+class _SharePlan:
+    """Admission-time snapshot of a validated prefix share.  Snapshotting
+    (plus the refcount holds the engine takes when the plan is made)
+    decouples the admission dispatch from the donor entry: a cache eviction
+    or pin reclaim between planning and dispatch cannot invalidate the
+    blocks mid-wave."""
+
+    blocks: np.ndarray  # all ceil(L/bs) donor prompt blocks, table order
+    nfull: int  # full leading blocks to alias
+    tail: int  # donor's partial tail block to COW-copy, -1 if none
+    length: int  # prompt tokens covered
+    first_tok: int  # the donor prefill's recorded argmax
 
 
 def _bucket_len(n: int, cache_len: int, floor: int = 8) -> int:
@@ -196,8 +221,8 @@ def _paged_merge_admitted(arena: "tm.PagedKVCache", new: tm.KVCache, cur_tok,
     p_rows = arena.k.shape[1]
     m = arena.table.shape[1]
     target = jnp.where(newly, (tl + bs - 1) // bs, 0)
-    table, n_free = tm.alloc_blocks(
-        arena.table, arena.free, arena.n_free, target, newly, m
+    table, n_free, ref = tm.alloc_blocks(
+        arena.table, arena.free, arena.n_free, arena.ref, target, newly, m
     )
     rowmap = tm.block_rows(table, bs)  # (B, Sc)
     spos = jnp.arange(sc, dtype=jnp.int32)[None, :]
@@ -224,6 +249,7 @@ def _paged_merge_admitted(arena: "tm.PagedKVCache", new: tm.KVCache, cur_tok,
         table=table,
         free=arena.free,
         n_free=n_free,
+        ref=ref,
         k_scale=scat(arena.k_scale, new.k_scale),
         v_scale=scat(arena.v_scale, new.v_scale),
     )
@@ -294,7 +320,7 @@ class ServeEngine:
         cache_len: int = 512, eos_id: Optional[int] = None,
         spec_decode: Optional[bool] = None, draft_window: Optional[int] = None,
         paged_kv: Optional[bool] = None, block_size: Optional[int] = None,
-        pool_blocks: Optional[int] = None,
+        pool_blocks: Optional[int] = None, prefix_share: Optional[bool] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -315,6 +341,13 @@ class ServeEngine:
         self.live = np.zeros(slots, bool)
         self.paged_kv = env_flag("RGL_PAGED_KV") if paged_kv is None \
             else bool(paged_kv)
+        # prefix sharing is a paged-arena feature: on a contiguous arena the
+        # flag is inert (admission behaves exactly as before), so the
+        # contiguous cells of the CI matrix double as the fallback parity leg
+        self.prefix_share = (
+            env_flag("RGL_PREFIX_SHARE") if prefix_share is None
+            else bool(prefix_share)
+        ) and self.paged_kv
         self.truncations = 0  # requests retired by KV exhaustion (both modes)
         if block_size is None:
             env_bs = os.environ.get("RGL_KV_BLOCK", "")
@@ -340,14 +373,42 @@ class ServeEngine:
             )
             # host mirrors of the device allocator state: admission and
             # every dispatch replay the same block arithmetic the jitted
-            # allocator runs, so exhaustion checks never sync the device
-            self._free_host = self.pool_blocks
-            self._ntab = np.zeros(slots, np.int64)  # allocated blocks/slot
+            # allocator runs, so exhaustion checks never sync the device.
+            # The mirror is now content-exact, not just depth-exact — the
+            # stack's block ids and per-block refcounts are replayed so the
+            # host always knows WHICH blocks a slot holds (the retrieval
+            # cache pins concrete block ids, and refcounted frees return a
+            # data-dependent subset of a retiring slot's blocks)
+            self._free_stack: list = list(range(self.pool_blocks))
+            self._ref_host = np.zeros(self.pool_blocks, np.int32)
+            self._slot_blocks: list = [[] for _ in range(slots)]
             self.pool_high_water = 0  # max blocks ever simultaneously held
             self._live_dev = jnp.asarray(self.live)
             self._live_dirty = False
         else:
             self.cache = tm.init_cache(cfg, slots, cache_len)
+        # pre-dispatch invariant guard (satellite of the alloc_blocks
+        # sum(need) <= n_free contract): raises host-side with slot/pool
+        # counters instead of letting the jitted allocator silently alias
+        # stale stack entries.  Env-gated; tests/conftest.py turns it on.
+        self._kv_debug = env_flag("RGL_KV_DEBUG")
+        # prefix-sharing hooks + telemetry.  kv_pin_gate: entry -> bool,
+        # consulted before pinning prompt blocks to a retrieval-cache entry
+        # (the RAG layer wires a residency check so blocks are never pinned
+        # to an entry that was already evicted).  kv_pin_reclaim:
+        # want_blocks -> freed, consulted under pool pressure so cache pins
+        # are released before any live request is truncated.
+        self.kv_pin_gate = None
+        self.kv_pin_reclaim = None
+        self.kv_pins = 0  # entries that received a prompt-block pin
+        self.kv_releases = 0  # pins released (eviction / reclaim)
+        self.kv_pinned_blocks = 0  # blocks currently held by pins
+        self.kv_shared_admits = 0  # admissions served by aliased blocks
+        self.kv_reused_tokens = 0  # prompt tokens whose prefill was skipped
+        self.kv_cow_copies = 0  # partial tail blocks copied at adoption
+        self.prefill_batches = 0  # prefill dispatches issued by _admit
+        self.prefill_rows = 0  # prompts actually prefilled
+        self.admit_seconds = 0.0  # wall time inside _admit
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         # per-slot token history arena for the prompt-lookup drafter:
         # prompt + every emitted token, left-aligned.  hist_cap bounds the
@@ -386,6 +447,18 @@ class ServeEngine:
         return max(0, int(self.slots - self.live.sum()) - len(self.queue))
 
     # -- paged-pool host bookkeeping ------------------------------------------
+    @property
+    def _free_host(self) -> int:
+        """Free-stack depth (host mirror) — kept as the historical name so
+        existing telemetry and tests read it unchanged."""
+        return len(self._free_stack)
+
+    @property
+    def _ntab(self) -> np.ndarray:
+        """Per-slot allocated-block counts, derived from the content-exact
+        block-id mirror (historical name, see ``_slot_blocks``)."""
+        return np.array([len(b) for b in self._slot_blocks], np.int64)
+
     def _blocks_for(self, n_tokens: int) -> int:
         return -(-int(n_tokens) // self.block_size)  # ceil division
 
@@ -397,14 +470,66 @@ class ServeEngine:
             self._live_dirty = False
         return self._live_dev
 
+    def _guard_alloc(self, need_total: int, where: str) -> None:
+        """RGL_KV_DEBUG tripwire for the ``sum(need) <= n_free`` contract of
+        ``tm.alloc_blocks``: a violation on device silently aliases stale
+        free-stack entries (two slots end up writing the same pool block);
+        here it raises with the counters needed to debug the accounting."""
+        if self._kv_debug and need_total > len(self._free_stack):
+            raise RuntimeError(
+                f"paged-KV alloc invariant violated at {where}: dispatch "
+                f"would pop {need_total} blocks but the free stack holds "
+                f"{len(self._free_stack)} (pool_blocks={self.pool_blocks}, "
+                f"pinned={self.kv_pinned_blocks}, "
+                f"live={int(self.live.sum())}, "
+                f"per-slot blocks={[len(b) for b in self._slot_blocks]})"
+            )
+
+    def _pop_host(self, slot: int, n: int) -> list:
+        """Replay ``n`` free-stack pops for ``slot`` on the host mirrors —
+        exactly the device allocator's order (sequential from the top)."""
+        out = []
+        for _ in range(n):
+            blk = self._free_stack.pop()
+            self._ref_host[blk] = 1
+            self._slot_blocks[slot].append(blk)
+            out.append(blk)
+        return out
+
+    def _host_release(self, drops: dict) -> int:
+        """Replay refcount drops on the host mirrors: decrement each block's
+        count, push blocks hitting zero back in ascending-id order (the
+        device's cumsum-compaction order).  Returns blocks pushed."""
+        pushed = []
+        for blk in sorted(drops):
+            r = int(self._ref_host[blk]) - drops[blk]
+            if r < 0 and self._kv_debug:
+                raise RuntimeError(
+                    f"double-free of pool block {blk}: dropping "
+                    f"{drops[blk]} holds but refcount is "
+                    f"{int(self._ref_host[blk])} (pool_blocks="
+                    f"{self.pool_blocks}, pinned={self.kv_pinned_blocks})"
+                )
+            self._ref_host[blk] = max(r, 0)
+            if drops[blk] > 0 and r <= 0:
+                pushed.append(blk)
+        self._free_stack.extend(pushed)
+        return len(pushed)
+
     def _free_slots_paged(self, slot_ids) -> None:
-        """Return the named slots' blocks to the pool: one jitted push onto
-        the device free stack, mirrored on host."""
+        """Drop the named slots' holds on their blocks: one jitted dispatch,
+        mirrored on host.  Blocks shared with other slots or pinned by the
+        retrieval cache stay out of the free stack until their last holder
+        lets go."""
         mask = np.zeros(self.slots, bool)
         mask[list(slot_ids)] = True
         self.cache = tm.free_slot_blocks(self.cache, jnp.asarray(mask))
-        self._free_host += int(self._ntab[mask].sum())
-        self._ntab[mask] = 0
+        drops: dict = {}
+        for i in slot_ids:
+            for blk in self._slot_blocks[i]:
+                drops[blk] = drops.get(blk, 0) + 1
+            self._slot_blocks[i] = []
+        self._host_release(drops)
         self._live_dirty = True
 
     def _release_retired(self, live_before: np.ndarray) -> None:
@@ -425,17 +550,27 @@ class ServeEngine:
             if not self.live[i]:
                 continue
             hi = min(int(self._cursor[i]) + w, self.cache_len)
-            need[i] = max(self._blocks_for(hi) - int(self._ntab[i]), 0)
+            need[i] = max(self._blocks_for(hi) - len(self._slot_blocks[i]), 0)
         return need
+
+    def _reclaim_pins(self, deficit: int) -> int:
+        """Ask the cache tier (via the RAG layer's hook) to release pinned
+        prefilled-KV blocks under pool pressure — cache pins must never cost
+        a live request tokens, so this runs before any truncation."""
+        if self.kv_pin_reclaim is None or deficit <= 0:
+            return 0
+        return int(self.kv_pin_reclaim(int(deficit)))
 
     def _retire_pool_exhausted(self) -> list:
         """Host-side pre-dispatch exhaustion check: while the pool cannot
-        cover every live slot's next-step allocation, retire the
-        highest-indexed slot that needs a block (``truncated=True``) and
-        reclaim its blocks.  Deterministic, and it guarantees the jitted
-        allocator never over-pops — the device needs no exhaustion path."""
+        cover every live slot's next-step allocation, first release cache
+        pins, then retire the highest-indexed slot that needs a block
+        (``truncated=True``) and reclaim its blocks.  Deterministic, and it
+        guarantees the jitted allocator never over-pops — the device needs
+        no exhaustion path."""
         finished = []
         need = self._paged_step_need()
+        self._reclaim_pins(int(need.sum()) - self._free_host)
         while need.sum() > self._free_host:
             needy = np.where(need > 0)[0]
             i = int(needy[-1])
@@ -456,11 +591,104 @@ class ServeEngine:
         need = self._paged_step_need()
         tot = int(need.sum())
         if tot:
-            self._ntab += need
-            self._free_host -= tot
+            self._guard_alloc(tot, "decode step")
+            for i in range(self.slots):
+                if need[i]:
+                    self._pop_host(i, int(need[i]))
         self.pool_high_water = max(
             self.pool_high_water, self.pool_blocks - self._free_host
         )
+
+    # -- prefix sharing: pins, plans, adoption --------------------------------
+    def _acquire_host(self, ids) -> None:
+        self.cache = tm.acquire_blocks(
+            self.cache, jnp.asarray(np.asarray(ids, np.int32))
+        )
+        for blk in ids:
+            self._ref_host[int(blk)] += 1
+
+    def _release_ids(self, ids) -> int:
+        """Drop one hold per listed block (device + host mirrors); returns
+        how many blocks actually returned to the free stack."""
+        self.cache = tm.release_blocks(
+            self.cache, jnp.asarray(np.asarray(ids, np.int32))
+        )
+        drops: dict = {}
+        for blk in ids:
+            drops[int(blk)] = drops.get(int(blk), 0) + 1
+        return self._host_release(drops)
+
+    def _pin_entry(self, entry, slot: int, req: "Request", tok0: int) -> None:
+        """Attach the freshly prefilled prompt blocks of ``slot`` to the
+        retrieval-cache entry that produced the prompt: the pin takes one
+        refcount hold per block, records the exact prompt and first token,
+        and registers a release hook the cache calls on eviction."""
+        if getattr(entry, "kv_blocks", None) is not None:
+            return  # already pinned (by this request's wave-mate or earlier)
+        if self.kv_pin_gate is not None and not self.kv_pin_gate(entry):
+            return  # entry no longer resident — pinning would leak blocks
+        L = len(req.prompt_ids)
+        blocks = np.asarray(
+            self._slot_blocks[slot][:self._blocks_for(L)], np.int32
+        )
+        if blocks.size == 0:
+            return
+        self._acquire_host(blocks)
+        entry.kv_blocks = blocks
+        entry.kv_len = L
+        entry.kv_first_tok = int(tok0)
+        entry.kv_prompt = np.asarray(req.prompt_ids, np.int32).copy()
+        entry.kv_owner = self
+        entry.kv_release = self._release_kv_pin
+        self.kv_pins += 1
+        self.kv_pinned_blocks += int(blocks.size)
+
+    def _release_kv_pin(self, entry) -> int:
+        """Release an entry's prompt-block pin (cache eviction hook and the
+        pool-pressure reclaim path).  Idempotent; returns how many blocks
+        actually came back to the free stack (blocks still aliased by live
+        slots stay out until those slots retire)."""
+        blocks = getattr(entry, "kv_blocks", None)
+        if blocks is None:
+            return 0
+        entry.kv_blocks = None
+        entry.kv_prompt = None
+        entry.kv_owner = None
+        entry.kv_release = None
+        self.kv_releases += 1
+        self.kv_pinned_blocks -= int(np.asarray(blocks).size)
+        return self._release_ids(list(np.asarray(blocks)))
+
+    def _plan_share(self, req: "Request"):
+        """Validate a request's ``shared_prefix`` against the entry's pin at
+        admission time and snapshot it into a :class:`_SharePlan`, taking
+        one refcount hold per donor block so nothing the plan references
+        can be recycled before the adoption dispatch.  Returns None (and
+        takes no holds) when the pin is gone, owned by another engine's
+        pool, or covers a different prompt — the request then just prefills
+        fresh, which is always correct."""
+        entry = req.shared_prefix
+        if entry is None:
+            return None
+        blocks = getattr(entry, "kv_blocks", None)
+        if blocks is None or getattr(entry, "kv_owner", None) is not self:
+            return None
+        kp = getattr(entry, "kv_prompt", None)
+        pi = np.asarray(req.prompt_ids, np.int32)
+        if kp is None or len(kp) != len(pi) or not np.array_equal(kp, pi):
+            return None
+        L = int(entry.kv_len)
+        blocks = np.asarray(blocks, np.int32)
+        nfull = L // self.block_size
+        tail = int(blocks[-1]) if L % self.block_size else -1
+        plan = _SharePlan(blocks=blocks, nfull=nfull, tail=tail, length=L,
+                          first_tok=int(entry.kv_first_tok))
+        self._acquire_host(blocks)
+        return plan
+
+    def _drop_plan(self, plan: "_SharePlan") -> None:
+        """Release a plan's holds without admitting it (gate backout)."""
+        self._release_ids(list(plan.blocks))
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -498,6 +726,13 @@ class ServeEngine:
         return out
 
     def _admit(self) -> list:
+        t0 = time.perf_counter()
+        try:
+            return self._admit_inner()
+        finally:
+            self.admit_seconds += time.perf_counter() - t0
+
+    def _admit_inner(self) -> list:
         """Refill free slots with one masked batched prefill.  Returns the
         requests that finish AT admission (first token hits EOS, or
         ``max_new_tokens == 1``) — they never occupy a live slot, so a
@@ -508,18 +743,37 @@ class ServeEngine:
         an admit is never pool-truncated on its very first step.  FIFO is
         preserved: a head-of-line request that does not fit blocks the
         rest of the queue instead of being skipped (full-size pools never
-        gate, keeping admission identical to the contiguous schedule)."""
+        gate, keeping admission identical to the contiguous schedule).
+
+        Prefix sharing (``prefix_share``): a request whose validated
+        ``shared_prefix`` entry pins this pool's blocks skips the prefill
+        batch entirely — its plan aliases the donor's full blocks and
+        COW-copies the partial tail in one ``tm.adopt_prefix_blocks``
+        dispatch, so it only needs the gate's usual one-extra-block
+        reservation.  Under pool pressure the gate releases cache pins
+        before refusing a head-of-line request, so sharing never admits
+        *less* than the unshared schedule would."""
         free = [i for i in range(self.slots) if not self.live[i]]
+        plans: dict = {}  # queue position taken -> _SharePlan
         if self.paged_kv:
             take = 0
-            budget = self._free_host
+            taken = 0  # blocks already committed to earlier takes
             for r in list(self.queue)[:len(free)]:
-                need = self._blocks_for(
+                full_need = self._blocks_for(
                     min(len(r.prompt_ids) + 1, self.cache_len)
                 )
-                if need > budget:
+                plan = self._plan_share(r) if self.prefix_share else None
+                need = full_need - plan.nfull if plan is not None \
+                    else full_need
+                if need > self._free_host - taken:
+                    self._reclaim_pins(need - (self._free_host - taken))
+                if need > self._free_host - taken:
+                    if plan is not None:
+                        self._drop_plan(plan)
                     break
-                budget -= need
+                if plan is not None:
+                    plans[take] = plan
+                taken += need
                 take += 1
         else:
             take = min(len(free), len(self.queue))
@@ -527,56 +781,118 @@ class ServeEngine:
             return []
         reqs = [self.queue.popleft() for _ in range(take)]
         slot_ids = free[:take]
-        # one masked batched prefill: batch padded to `slots` rows, lengths
-        # padded to a shared power-of-two bucket
-        bucket = _bucket_len(max(len(r.prompt_ids) for r in reqs),
-                             self.cache_len)
-        toks = np.zeros((self.slots, bucket), np.int32)
-        tl = np.zeros((self.slots,), np.int32)
-        for j, r in enumerate(reqs):
-            L = len(r.prompt_ids)  # submit() guarantees L < cache_len
-            toks[j, :L] = np.asarray(r.prompt_ids, np.int32)
-            tl[j] = L
-        logits, fresh = _prefill_batch(
-            self.params, jnp.asarray(toks), jnp.asarray(tl),
-            self.cfg, self.cache_len,
-        )
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (slots,)
-        rows = np.zeros(self.slots, np.int32)
-        newly = np.zeros(self.slots, bool)
-        tl_slot = np.zeros(self.slots, np.int32)
-        for j, i in enumerate(slot_ids):
-            rows[i] = j
-            newly[i] = True
-            tl_slot[i] = tl[j]
-        if self.paged_kv:
-            self.cache, self.cur_tok = _paged_merge_admitted(
-                self.cache, fresh, self.cur_tok, first,
-                jnp.asarray(rows), jnp.asarray(newly), jnp.asarray(tl_slot),
-                self.block_size,
+        first_by_slot = np.zeros(self.slots, np.int64)
+        # -- fresh population: one masked batched prefill (batch padded to
+        # `slots` rows, lengths padded to a shared power-of-two bucket)
+        fresh_pairs = [(j, i) for j, i in enumerate(slot_ids)
+                       if j not in plans]
+        if fresh_pairs:
+            bucket = _bucket_len(
+                max(len(reqs[j].prompt_ids) for j, _ in fresh_pairs),
+                self.cache_len,
             )
+            toks = np.zeros((self.slots, bucket), np.int32)
+            tl = np.zeros((self.slots,), np.int32)
+            for f, (j, _) in enumerate(fresh_pairs):
+                L = len(reqs[j].prompt_ids)  # submit() guarantees L < Sc
+                toks[f, :L] = np.asarray(reqs[j].prompt_ids, np.int32)
+                tl[f] = L
+            logits, fresh = _prefill_batch(
+                self.params, jnp.asarray(toks), jnp.asarray(tl),
+                self.cfg, self.cache_len,
+            )
+            self.prefill_batches += 1
+            self.prefill_rows += len(fresh_pairs)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (slots,)
+            rows = np.zeros(self.slots, np.int32)
+            newly = np.zeros(self.slots, bool)
+            tl_slot = np.zeros(self.slots, np.int32)
+            for f, (j, i) in enumerate(fresh_pairs):
+                rows[i] = f
+                newly[i] = True
+                tl_slot[i] = tl[f]
+            if self.paged_kv:
+                self._guard_alloc(
+                    sum(self._blocks_for(int(t)) for t in tl_slot),
+                    "admission prefill merge",
+                )
+                self.cache, self.cur_tok = _paged_merge_admitted(
+                    self.cache, fresh, self.cur_tok, first,
+                    jnp.asarray(rows), jnp.asarray(newly),
+                    jnp.asarray(tl_slot), self.block_size,
+                )
+                # replay the merge's pops: slot-index ascending, exactly the
+                # device allocator's order
+                for f, (j, i) in enumerate(fresh_pairs):
+                    self._pop_host(i, self._blocks_for(int(tl[f])))
+                self._live_dirty = True
+            else:
+                self.cache, self.cur_tok = _merge_admitted(
+                    self.cache, fresh, self.cur_tok, first,
+                    jnp.asarray(rows), jnp.asarray(newly),
+                )
+            first_np = np.asarray(first)
+            for f, (j, i) in enumerate(fresh_pairs):
+                first_by_slot[i] = int(first_np[f])
+        # -- shared population: alias donor blocks, no prefill dispatch
+        if plans:
+            mask = np.zeros(self.slots, bool)
+            src_table = np.full((self.slots, self.max_blocks), -1, np.int32)
+            length = np.zeros(self.slots, np.int32)
+            tail = np.full(self.slots, -1, np.int32)
+            firsts = np.zeros(self.slots, np.int32)
             for j, i in enumerate(slot_ids):
-                nb = self._blocks_for(tl[j])
-                self._ntab[i] = nb
-                self._free_host -= nb
+                plan = plans.get(j)
+                if plan is None:
+                    continue
+                mask[i] = True
+                src_table[i, :plan.nfull] = plan.blocks[:plan.nfull]
+                length[i] = plan.length
+                tail[i] = plan.tail
+                firsts[i] = plan.first_tok
+                first_by_slot[i] = plan.first_tok
+            self._guard_alloc(int((tail >= 0).sum()), "prefix-share adopt")
+            self.cache, self.cur_tok = tm.adopt_prefix_blocks(
+                self.cache, self.cur_tok, jnp.asarray(mask),
+                jnp.asarray(src_table), jnp.asarray(length),
+                jnp.asarray(tail), jnp.asarray(firsts), self.block_size,
+            )
+            # host replay, in the dispatch's order: tail pops (slot index
+            # ascending), then the one-dispatch tail-source holds release
+            tail_drops: dict = {}
+            for j, i in enumerate(slot_ids):
+                plan = plans.get(j)
+                if plan is None:
+                    continue
+                self._slot_blocks[i] = [int(b)
+                                        for b in plan.blocks[:plan.nfull]]
+                if plan.tail >= 0:
+                    self._pop_host(i, 1)
+                    tail_drops[plan.tail] = tail_drops.get(plan.tail, 0) + 1
+                    self.kv_cow_copies += 1
+                self.kv_shared_admits += 1
+                self.kv_reused_tokens += plan.length
+            self._host_release(tail_drops)
+            self._live_dirty = True
+        if self.paged_kv:
             self.pool_high_water = max(
                 self.pool_high_water, self.pool_blocks - self._free_host
             )
-            self._live_dirty = True
-        else:
-            self.cache, self.cur_tok = _merge_admitted(
-                self.cache, fresh, self.cur_tok, first,
-                jnp.asarray(rows), jnp.asarray(newly),
-            )
-        first_np = np.asarray(first)
         finished = []
         dead_at_admission = []
         for j, i in enumerate(slot_ids):
             req = reqs[j]
-            tok0 = int(first_np[j])
+            tok0 = int(first_by_slot[i])
             req.out_tokens.append(tok0)
             self.emitted_tokens += 1
-            self._cursor[i] = tl[j]  # merge pinned this slot's device cursor
+            L = len(req.prompt_ids)
+            self._cursor[i] = L  # merge/adopt pinned this slot's cursor
+            if (self.prefix_share and j not in plans
+                    and req.pin_to is not None):
+                # donor side: hand this prompt's freshly prefilled blocks to
+                # the retrieval-cache entry so the next identical prompt
+                # skips prefill
+                self._pin_entry(req.pin_to, i, req, tok0)
             hit_eos = self.eos_id is not None and tok0 == self.eos_id
             if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
                 # done at admission: the arena row was written but the slot
@@ -587,7 +903,6 @@ class ServeEngine:
                 continue
             self.active[i] = req
             self.live[i] = True
-            L = len(req.prompt_ids)
             self.hist[i, :L] = np.asarray(req.prompt_ids, np.int32)
             self.hist[i, L] = tok0
             self.hist_len[i] = L + 1
@@ -595,7 +910,8 @@ class ServeEngine:
             self._out_len[i] = 1
         if self.paged_kv and dead_at_admission:
             # admission allocated these slots' prompt blocks, but the slot
-            # never went live — give the blocks straight back
+            # never went live — give the blocks straight back (pinned or
+            # still-shared blocks stay with their remaining holders)
             self._free_slots_paged(dead_at_admission)
         if self.spec_decode:
             self._hist_dev = jnp.asarray(self.hist)
@@ -746,6 +1062,10 @@ class ServeEngine:
             ),
             "paged_kv": self.paged_kv,
             "truncations": self.truncations,
+            "prefix_share": self.prefix_share,
+            "prefill_batches": self.prefill_batches,
+            "prefill_rows": self.prefill_rows,
+            "admit_seconds": self.admit_seconds,
         }
         if self.paged_kv:
             stats.update(
@@ -753,6 +1073,12 @@ class ServeEngine:
                 pool_blocks=self.pool_blocks,
                 pool_high_water_blocks=self.pool_high_water,
                 pool_free_blocks=self._free_host,
+                kv_shared_admits=self.kv_shared_admits,
+                kv_reused_tokens=self.kv_reused_tokens,
+                kv_cow_copies=self.kv_cow_copies,
+                kv_pins=self.kv_pins,
+                kv_releases=self.kv_releases,
+                kv_pinned_blocks=self.kv_pinned_blocks,
             )
         return stats
 

@@ -229,6 +229,7 @@ class RAGServeEngine:
         paged_kv: Optional[bool] = None,
         kv_block_size: Optional[int] = None,
         kv_pool_blocks: Optional[int] = None,
+        prefix_share: Optional[bool] = None,
         retrieval_timeout_s: Optional[float] = None,
         max_retries: Optional[int] = None,
         retry_backoff_s: Optional[float] = None,
@@ -252,11 +253,20 @@ class RAGServeEngine:
             params, cfg, slots=slots, cache_len=cache_len, eos_id=eos_id,
             spec_decode=spec_decode, draft_window=draft_window,
             paged_kv=paged_kv, block_size=kv_block_size,
-            pool_blocks=kv_pool_blocks,
+            pool_blocks=kv_pool_blocks, prefix_share=prefix_share,
         )
         self.cache = retrieval_cache if retrieval_cache is not None else \
             RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps,
                            policy=cache_policy, ttl=cache_ttl)
+        if self.engine.prefix_share:
+            # wire the engine's pin protocol to this cache: pins only attach
+            # to entries still resident (a pin on an evicted entry would leak
+            # pool blocks forever), and pool pressure releases cache pins
+            # before the engine truncates any live request
+            self.engine.kv_pin_gate = self.cache.is_resident
+            self.engine.kv_pin_reclaim = (
+                lambda n: self.cache.reclaim_kv(n, owner=self.engine)
+            )
         self.prefetch = _prefetch_default() if prefetch is None else \
             bool(prefetch)
         self.admission = _admission_default() if admission is None else \
@@ -494,6 +504,16 @@ class RAGServeEngine:
                     uid=r.uid, prompt_ids=r.prompt_ids,
                     max_new_tokens=r.max_new_tokens, ticket=self._next_ticket,
                 )
+                if self.engine.prefix_share and e is not None:
+                    # consumer side when the entry already pins this pool's
+                    # prefilled prompt blocks (admission re-validates the
+                    # exact prompt and falls back to fresh prefill on any
+                    # mismatch); donor side otherwise — a fresh admission
+                    # hands its prompt blocks to the entry as a pin
+                    inner.pin_to = e
+                    if getattr(e, "kv_blocks", None) is not None and \
+                            getattr(e, "kv_owner", None) is self.engine:
+                        inner.shared_prefix = e
                 ticket = inner.ticket
                 self._inflight[ticket] = r
                 self._next_ticket += 1

@@ -1,5 +1,13 @@
+import os
+
 import numpy as np
 import pytest
+
+# the paged-KV invariant guard (host-side tripwire for the alloc_blocks
+# sum(need) <= n_free contract and for refcount double-frees) is env-gated
+# off in production; the whole test suite runs with it armed so any
+# accounting drift fails loudly instead of silently aliasing pool blocks
+os.environ.setdefault("RGL_KV_DEBUG", "1")
 
 
 @pytest.fixture(scope="session")

@@ -133,9 +133,14 @@ def test_alloc_blocks_pops_distinct_and_masks_dead_slots():
     n_free = jnp.asarray(pool, jnp.int32)
     target = jnp.asarray([2, 3, 1], jnp.int32)
     live = jnp.asarray([True, True, False])
-    t2, nf2 = tm.alloc_blocks(table, free, n_free, target, live, 3)
+    ref = jnp.zeros((pool,), jnp.int32)
+    t2, nf2, ref2 = tm.alloc_blocks(table, free, n_free, ref, target, live, 3)
     t2 = np.asarray(t2)
     assert int(nf2) == pool - 5  # 2 + 3, dead slot allocates nothing
+    # every popped block carries exactly one hold (its slot's table entry)
+    assert int(np.asarray(ref2).sum()) == 5
+    assert set(np.where(np.asarray(ref2) == 1)[0]) == \
+        {b for row in t2[:2] for b in row if b >= 0}
     assert (t2[2] == -1).all()
     got = [b for row in t2[:2] for b in row if b >= 0]
     assert len(got) == 5 and len(set(got)) == 5  # distinct blocks
@@ -152,9 +157,10 @@ def test_alloc_is_incremental_against_existing_table():
     table = jnp.asarray([[7, -1, -1]], jnp.int32)  # one block held already
     free = jnp.arange(pool, dtype=jnp.int32)
     n_free = jnp.asarray(pool, jnp.int32)
-    t2, nf2 = tm.alloc_blocks(table, free, n_free,
-                              jnp.asarray([3], jnp.int32),
-                              jnp.asarray([True]), 3)
+    t2, nf2, _ = tm.alloc_blocks(table, free, n_free,
+                                 jnp.zeros((pool,), jnp.int32),
+                                 jnp.asarray([3], jnp.int32),
+                                 jnp.asarray([True]), 3)
     t2 = np.asarray(t2)
     assert int(nf2) == pool - 2
     assert t2[0][0] == 7  # existing entry untouched
@@ -165,20 +171,23 @@ def test_free_then_realloc_reuses_blocks():
     """free_slot_blocks pushes a slot's blocks back; the next alloc pops
     exactly those (LIFO stack → zero fragmentation growth on churn)."""
     cache = tm.init_paged_cache(CFG, 2, 32, 16, 4)
-    t2, nf2 = tm.alloc_blocks(cache.table, cache.free, cache.n_free,
-                              jnp.asarray([2, 0], jnp.int32),
-                              jnp.asarray([True, False]), 2)
+    t2, nf2, ref2 = tm.alloc_blocks(cache.table, cache.free, cache.n_free,
+                                    cache.ref,
+                                    jnp.asarray([2, 0], jnp.int32),
+                                    jnp.asarray([True, False]), 2)
     import dataclasses
     held = set(np.asarray(t2)[0].tolist())
-    cache = dataclasses.replace(cache, table=t2, n_free=nf2)
+    cache = dataclasses.replace(cache, table=t2, n_free=nf2, ref=ref2)
     cache = tm.free_slot_blocks(cache, jnp.asarray([True, False]))
     assert int(cache.n_free) == 4
+    assert (np.asarray(cache.ref) == 0).all()  # zero holders everywhere
     assert (np.asarray(cache.table)[0] == -1).all()
     assert (np.asarray(cache.pos)[0] == -1).all()
     assert int(np.asarray(cache.cursor)[0]) == 0
-    t3, nf3 = tm.alloc_blocks(cache.table, cache.free, cache.n_free,
-                              jnp.asarray([0, 2], jnp.int32),
-                              jnp.asarray([False, True]), 2)
+    t3, nf3, _ = tm.alloc_blocks(cache.table, cache.free, cache.n_free,
+                                 cache.ref,
+                                 jnp.asarray([0, 2], jnp.int32),
+                                 jnp.asarray([False, True]), 2)
     assert set(np.asarray(t3)[1].tolist()) == held  # same blocks, new slot
 
 

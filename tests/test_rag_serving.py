@@ -324,6 +324,16 @@ def test_cache_ttl_expiry_and_fifo_eviction():
     clock["t"] = 11.0  # e0 expired (11 > 10), e1 alive (6s old)
     assert cache.get(_emb(0)) is None
     assert cache.expired == 1 and cache.misses == 1
+    # repeated lookups of the same expired resident entry count misses,
+    # but the EXPIRY is counted once per entry, not once per lookup
+    assert cache.get(_emb(0)) is None
+    assert cache.get(_emb(0)) is None
+    assert cache.expired == 1 and cache.misses == 3
+    # resident/live split: the expired entry still occupies capacity
+    # (peek_stale can serve it) but is not live for get()
+    s = cache.stats()
+    assert s["resident"] == 2 and s["live"] == 1
+    assert s["size"] == s["resident"]  # historical meaning preserved
     assert cache.get(_emb(1)) is not None
     # capacity pressure evicts oldest-inserted, not least-recent
     cache.put(_emb(2), _entry(2))
