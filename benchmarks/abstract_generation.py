@@ -64,7 +64,7 @@ def run(n_nodes=3000, n_queries=48, seed=0, budget=12):
             config=PipelineConfig(strategy=strat, k_seeds=4, max_hops=3,
                                   max_nodes=48, filter_budget=budget + 1),
         )
-        sub, _ = pipe.retrieve(qe)
+        sub = pipe.retrieve(qe).sub
         ctxs = subgraph_texts(sub, g.node_text)
         ctxs = [
             [t for v, t in zip(np.asarray(sub.nodes[r]), ctx) if v != q_ids[r]][:budget]

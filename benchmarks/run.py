@@ -30,6 +30,10 @@ Prints ``name,us_per_call,derived`` CSV blocks:
                           workload: admission latency + prefill rows +
                           peak pool residency, share on vs off (also
                           writes BENCH_prefix_sharing.json)
+  * online_mutation     — serving goodput under a live write mix (streaming
+                          graph/index mutations vs the frozen store), plus
+                          a staleness probe and a compaction-parity check
+                          (also writes BENCH_online_mutation.json)
 Roofline (§Roofline/§Perf) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
 
@@ -50,6 +54,7 @@ def main() -> None:
         "retrieval", "completion", "abstract", "kernels", "serving",
         "async_serving", "sharding", "scaling", "spec_decode", "paged_kv",
         "fault_tolerance", "multi_replica", "prefix_sharing",
+        "online_mutation",
     ])
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer queries")
@@ -68,8 +73,9 @@ def main() -> None:
 
     from benchmarks import (
         abstract_generation, async_serving, fault_tolerance, index_sharding,
-        kernels, modality_completion, multi_replica, paged_kv,
-        prefix_sharing, rag_serving, retrieval_scaling, spec_decode,
+        kernels, modality_completion, multi_replica, online_mutation,
+        paged_kv, prefix_sharing, rag_serving, retrieval_scaling,
+        spec_decode,
     )
 
     print("name,us_per_call,derived")
@@ -216,6 +222,21 @@ def main() -> None:
         print(f"prefix_sharing/residency,{res['high_water_on_blocks']:.0f},"
               f"frac_vs_unshared={res['residency_frac_vs_unshared']:.2f};"
               f"pinned={res['pinned_blocks_final']}")
+    if args.only in (None, "online_mutation"):
+        kw = {} if not fast else (
+            dict(n_nodes=500, n_requests=8, slots=3, max_new=6,
+                 n_probes=2) if smoke else
+            dict(n_nodes=1000, n_requests=12, max_new=8, n_probes=3))
+        rep = online_mutation.run(**kw)
+        online_mutation.write_json(rep, bench_path("online_mutation"))
+        m = rep["mutating"]
+        print(f"online_mutation/write_mix={rep['write_mix']:.0%},"
+              f"{m['wall_s'] * 1e6:.0f},"
+              f"goodput_ratio={rep['goodput_ratio']:.2f}x;"
+              f"epoch={m['mutation_epoch']};"
+              f"invalidated={m['mutation_invalidated']};"
+              f"fresh={rep['staleness']['fresh_frac']:.2f};"
+              f"parity={'ok' if rep['parity']['ok'] else 'BROKEN'}")
 
 
 if __name__ == "__main__":

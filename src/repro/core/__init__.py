@@ -1,5 +1,8 @@
 """RGL core: the paper's contribution — the 5-stage RAG-on-Graphs pipeline."""
-from repro.core.pipeline import RGLPipeline, PipelineConfig, index_from_config
+from repro.core.pipeline import (
+    RGLPipeline, PipelineConfig, RetrievalResult, index_from_config,
+)
+from repro.core.mutation import MutableGraphStore, MutationBatch, MutationReport
 from repro.core.graph_retrieval import (
     Subgraph,
     bfs_subgraph,
@@ -10,18 +13,22 @@ from repro.core.graph_retrieval import (
     induced_adjacency,
 )
 from repro.core.workset import Workset, build_workset, workset_adjacency
-from repro.core.indexing import BruteIndex, IVFIndex, build_index
+from repro.core.indexing import (
+    BruteIndex, IVFIndex, MutableBruteIndex, MutableIVFIndex, build_index,
+)
 from repro.core.sharding import ShardedIndex, hierarchical_topk_merge
 from repro.core.filters import dynamic_filter, similarity_scores
 from repro.core.tokenization import Vocab, GraphTokenizer
 from repro.core.generation import ExtractiveGenerator, make_lm_generator
 
 __all__ = [
-    "RGLPipeline", "PipelineConfig", "index_from_config", "Subgraph",
+    "RGLPipeline", "PipelineConfig", "RetrievalResult", "index_from_config",
+    "MutableGraphStore", "MutationBatch", "MutationReport", "Subgraph",
     "bfs_subgraph", "dense_subgraph", "steiner_subgraph", "retrieve_subgraph",
     "bfs_distances", "induced_adjacency",
     "Workset", "build_workset", "workset_adjacency",
-    "BruteIndex", "IVFIndex", "ShardedIndex", "build_index",
+    "BruteIndex", "IVFIndex", "MutableBruteIndex", "MutableIVFIndex",
+    "ShardedIndex", "build_index",
     "hierarchical_topk_merge",
     "dynamic_filter", "similarity_scores",
     "Vocab", "GraphTokenizer",

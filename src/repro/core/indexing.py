@@ -15,6 +15,7 @@ Vector indexes over node embeddings (paper §2.1.2):
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
@@ -163,6 +164,152 @@ def ivf_probe_scan(
 
 
 _ivf_search = jax.jit(ivf_probe_scan, static_argnames=("nprobe", "k", "tiled"))
+
+
+# ---- mutable tier (online insert/delete; see repro.core.mutation) --------
+#
+# The frozen indexes above assume the corpus is complete before build.  The
+# mutable variants serve a corpus that changes while the engine runs:
+# capacity-padded embedding rows with a ``valid`` bitmap (deletes are masked
+# at scan time, FAISS-style), and — for IVF — a **frozen coarse quantizer**:
+# centroids are trained once, new embeddings are assigned to the nearest
+# existing centroid into per-list append slack, and compaction rebuilds only
+# the list layout (never the centroids).  Freezing the quantizer is what
+# makes "rebuild from scratch on the merged corpus" a deterministic
+# comparator: both the incremental path and the rebuild assign with
+# :func:`assign_to_centroids`, so post-compaction state is bitwise equal.
+
+
+@jax.jit
+def assign_to_centroids(embn: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest-centroid assignment (same distance form as :func:`kmeans`).
+
+    The single canonical assignment used by activation, incremental adds
+    and compaction — internal consistency is what the bitwise rebuild
+    parity rests on.
+    """
+    d = (
+        jnp.sum(embn * embn, axis=1)[:, None]
+        - 2.0 * embn @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )
+    return jnp.argmin(d, axis=1)
+
+
+def build_inverted_lists_slack(
+    assign: np.ndarray, ids: np.ndarray, capacity: int, n_clusters: int,
+    slack: int, min_pad: int = 8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Padded inverted lists over ``ids`` only, with ``slack`` spare slots
+    per list for future appends.  Returns (lists (C, L) int32 with sentinel
+    ``capacity``, counts (C,)).  Members are stored in ascending-id order
+    (``ids`` must be sorted), the canonical layout compaction re-creates."""
+    assign = np.asarray(assign)
+    ids = np.asarray(ids, dtype=np.int32)
+    counts = np.bincount(assign, minlength=n_clusters).astype(np.int32)
+    width = int(counts.max()) + slack if ids.size else slack
+    width = max(min_pad, -(-width // min_pad) * min_pad)
+    lists = np.full((n_clusters, width), capacity, dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    ranks = np.arange(ids.size) - starts[assign[order]]
+    lists[assign[order], ranks] = ids[order]
+    return lists, counts
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _masked_topk(q, emb, valid, k: int):
+    scores = q @ emb.T
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@dataclasses.dataclass
+class MutableBruteIndex:
+    """Exact scan over capacity-padded rows; deletes masked to ``-inf``."""
+
+    emb: jnp.ndarray  # (capacity, D) L2-normalized; dead rows are zero
+    valid: jnp.ndarray  # (capacity,) bool
+
+    def search(self, queries, k: int):
+        q = l2_normalize(jnp.asarray(queries, dtype=jnp.float32))
+        return _masked_topk(q, self.emb, self.valid, k)
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k"))
+def _mutable_ivf_search(emb, centroids, lists, list_mask, valid, q,
+                        nprobe: int, k: int):
+    cs = q @ centroids.T
+    _, probe = jax.lax.top_k(cs, nprobe)
+    cand = lists[probe].reshape(q.shape[0], -1)
+    cmask = list_mask[probe].reshape(q.shape[0], -1)
+    safe = jnp.minimum(cand, emb.shape[0] - 1)
+    cmask = cmask & valid[safe]  # scan-time delete masking
+    return ivf_ops.ivf_candidate_scan(q, emb, cand, cmask, k)
+
+
+class MutableIVFIndex:
+    """IVF with a frozen coarse quantizer and per-list append slack.
+
+    ``h_lists``/``h_counts`` are host mirrors (mutation-rate structures);
+    the device copies are re-uploaded lazily after a mutation.  Appends
+    that would overflow a list raise
+    :class:`repro.graph.delta.SlackOverflow`, which the owning store
+    answers with a compaction (list layout rebuilt, centroids untouched).
+    """
+
+    def __init__(self, emb, centroids, h_lists, h_counts, valid,
+                 nprobe: int = 4, slack: int = 8):
+        self.emb = emb  # (capacity, D) normalized device
+        self.centroids = centroids  # (C, D) device, frozen
+        self.h_lists = h_lists  # (C, L) int32, sentinel = capacity
+        self.h_counts = h_counts  # (C,) int32
+        self.valid = valid  # (capacity,) bool device
+        self.nprobe = int(nprobe)
+        self.slack = int(slack)
+        self._dev = None  # cached (lists, mask) device pair
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.h_lists.shape[0])
+
+    def add(self, ids: np.ndarray) -> np.ndarray:
+        """Append ``ids`` (already written into ``emb``) to their nearest
+        list.  Returns the cluster assignment; raises on slack overflow."""
+        from repro.graph.delta import SlackOverflow  # local: avoid cycle
+
+        ids = np.asarray(ids, dtype=np.int32)
+        if ids.size == 0:
+            return ids
+        assign = np.asarray(assign_to_centroids(self.emb[ids], self.centroids))
+        width = self.h_lists.shape[1]
+        for i, c in zip(ids, assign):
+            cnt = int(self.h_counts[c])
+            if cnt >= width:
+                raise SlackOverflow(
+                    f"IVF list {int(c)}: {width} slots full; compact"
+                )
+            self.h_lists[c, cnt] = i
+            self.h_counts[c] = cnt + 1
+        self._dev = None
+        return assign
+
+    def _device_lists(self):
+        if self._dev is None:
+            mask = (
+                np.arange(self.h_lists.shape[1])[None, :]
+                < self.h_counts[:, None]
+            )
+            self._dev = (jnp.asarray(self.h_lists), jnp.asarray(mask))
+        return self._dev
+
+    def search(self, queries, k: int):
+        q = l2_normalize(jnp.asarray(queries, dtype=jnp.float32))
+        lists, mask = self._device_lists()
+        return _mutable_ivf_search(
+            self.emb, self.centroids, lists, mask, self.valid, q,
+            min(self.nprobe, self.n_clusters), k,
+        )
 
 
 def build_index(emb, kind: str = "brute", **kw):

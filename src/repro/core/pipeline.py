@@ -34,6 +34,44 @@ class PipelineConfig:
     workset_cap: int = 2048  # compact backend candidate capacity per query
 
 
+@dataclasses.dataclass(frozen=True)
+class RetrievalResult:
+    """Typed result of :meth:`RGLPipeline.retrieve` / ``retrieve_many``.
+
+    Replaces the positional ``(sub, seeds, n_valid)`` tuples so the graph
+    mutation ``epoch`` has a principled home: the serving cache compares an
+    entry's retrieval epoch against the store's current epoch to decide
+    whether a collected result may still be cached (see
+    :meth:`repro.serving.cache.RetrievalCache.put`).
+
+    ``sub`` keeps the same non-blocking contract as before: it may hold
+    in-flight device arrays (or lazy simulation proxies); accessors here
+    never force a host sync.
+    """
+
+    sub: object  # Subgraph (or a lazy duck-typed stand-in, see simulate.py)
+    seeds: object  # (Q, k_seeds) node ids
+    n_valid: int = 1  # leading rows of sub/seeds that are meaningful
+    epoch: int = 0  # graph mutation epoch the retrieval ran against
+
+    # passthrough views so callers don't reach two levels deep
+    @property
+    def nodes(self):
+        return self.sub.nodes
+
+    @property
+    def mask(self):
+        return self.sub.mask
+
+    @property
+    def dist(self):
+        return self.sub.dist
+
+    @property
+    def overflow(self):
+        return getattr(self.sub, "overflow", None)
+
+
 def index_from_config(emb, config: PipelineConfig, **kw):
     """Build the stage-1 index named by ``config.index_kind``.
 
@@ -56,6 +94,27 @@ class RGLPipeline:
     generator: Optional[object] = None
     node_text: Optional[list] = None
     config: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
+    # Attached by repro.core.mutation.MutableGraphStore.make_pipeline(); a
+    # frozen-corpus pipeline leaves it None (epoch stays 0 forever).
+    mutation_store: Optional[object] = None
+
+    @property
+    def epoch(self) -> int:
+        """Monotonic graph mutation epoch this pipeline currently serves."""
+        store = self.mutation_store
+        return 0 if store is None else int(store.epoch)
+
+    @property
+    def n_valid_nodes(self) -> int:
+        """Upper bound (exclusive) on node ids a retrieval may return.
+
+        With a mutation store attached the arrays are capacity-padded, so
+        the logical node count — not the array length — bounds valid ids.
+        """
+        store = self.mutation_store
+        if store is not None:
+            return int(store.n_nodes)
+        return int(self.node_emb.shape[0])
 
     # ---- functional stages --------------------------------------------------
     def retrieve_seeds(self, query_emb, encoder=None):
@@ -80,16 +139,19 @@ class RGLPipeline:
             sub, scores, jnp.asarray(seeds), budget=self.config.filter_budget
         )
 
-    def retrieve(self, query_emb, encoder=None) -> tuple[Subgraph, jnp.ndarray]:
+    def retrieve(self, query_emb, encoder=None) -> RetrievalResult:
         """Stages 2+3+filter — the sub-pipeline completion tasks use."""
         _, seeds = self.retrieve_seeds(query_emb, encoder=encoder)
         sub = self.retrieve_subgraph(seeds)
         sub = self.filter(sub, query_emb, seeds)
-        return sub, seeds
+        q = jnp.asarray(query_emb)
+        n_valid = 1 if q.ndim == 1 else int(q.shape[0])
+        return RetrievalResult(sub=sub, seeds=seeds, n_valid=n_valid,
+                               epoch=self.epoch)
 
     def retrieve_many(
         self, query_embs, *, batch_size: Optional[int] = None, encoder=None
-    ) -> tuple[Subgraph, jnp.ndarray, int]:
+    ) -> RetrievalResult:
         """Fixed-shape batched retrieval for serving admission.
 
         Pads the query batch up to ``batch_size`` rows (zeros) so every
@@ -98,8 +160,10 @@ class RGLPipeline:
         at serve time.  All retrieval stages are row-independent, so padding
         rows never perturb real results.
 
-        Returns ``(sub, seeds, n_valid)`` where ``sub``/``seeds`` have leading
-        dim ``batch_size`` and only the first ``n_valid`` rows are meaningful.
+        Returns a :class:`RetrievalResult` whose ``sub``/``seeds`` have
+        leading dim ``batch_size``; only the first ``n_valid`` rows are
+        meaningful.  ``epoch`` records the graph mutation epoch the
+        retrieval was dispatched against.
 
         **Non-blocking contract:** the returned arrays are device arrays whose
         computation may still be in flight (JAX async dispatch) — this method
@@ -123,8 +187,8 @@ class RGLPipeline:
             q = np.concatenate(
                 [q, np.zeros((bs - n_valid, q.shape[1]), np.float32)], axis=0
             )
-        sub, seeds = self.retrieve(jnp.asarray(q), encoder=encoder)
-        return sub, seeds, n_valid
+        res = self.retrieve(jnp.asarray(q), encoder=encoder)
+        return dataclasses.replace(res, n_valid=n_valid)
 
     def tokenize(self, query_texts, sub: Subgraph):
         assert self.tokenizer is not None and self.node_text is not None
@@ -133,7 +197,8 @@ class RGLPipeline:
 
     # ---- OOP API ------------------------------------------------------------
     def run(self, query_emb, query_texts, max_new_tokens: int = 0) -> dict:
-        sub, seeds = self.retrieve(query_emb)
+        res = self.retrieve(query_emb)
+        sub, seeds = res.sub, res.seeds
         ids, mask = self.tokenize(query_texts, sub)
         outputs = None
         if self.generator is not None:

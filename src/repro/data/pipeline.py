@@ -69,7 +69,7 @@ def rag_token_stream(
     while True:
         sel = rng.integers(0, n, size=batch)
         qe = query_emb[sel]
-        sub, _ = pipeline.retrieve(qe)
+        sub = pipeline.retrieve(qe).sub
         from repro.core.tokenization import subgraph_texts
 
         node_texts = subgraph_texts(sub, pipeline.node_text)

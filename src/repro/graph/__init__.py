@@ -6,6 +6,7 @@ code (samplers, generators, converters) goes through :class:`CSRGraph`.
 """
 from repro.graph.csr import CSRGraph
 from repro.graph.ell import ELLGraph, csr_to_ell
+from repro.graph.delta import CapacityOverflow, DeltaGraph, SlackOverflow
 from repro.graph.batch import batch_graphs
 from repro.graph.sampler import NeighborSampler
 from repro.graph import generators
@@ -14,6 +15,9 @@ __all__ = [
     "CSRGraph",
     "ELLGraph",
     "csr_to_ell",
+    "DeltaGraph",
+    "SlackOverflow",
+    "CapacityOverflow",
     "batch_graphs",
     "NeighborSampler",
     "generators",

@@ -1,0 +1,224 @@
+"""Delta tier over a frozen ELL graph: streaming edge/node mutation.
+
+The frozen formats (:class:`~repro.graph.csr.CSRGraph` on host,
+:class:`~repro.graph.ell.ELLGraph` on device) are compact-for-scan but
+immutable.  :class:`DeltaGraph` adds the mutable-for-ingest half of the
+graph_accel split (SNIPPETS.md): a **base** ELL block frozen at the last
+compaction, plus
+
+* per-node **append slack** — ``extra_deg`` spare neighbor slots per row
+  for edges added since the last compaction,
+* a **kill bitmap** over base slots — deleting a base edge masks its slot
+  instead of restructuring the row,
+* a **tombstone bitmap** over nodes — deleting a node masks the node and
+  every edge into it at fold time (its storage is reclaimed at
+  compaction; node ids are never reused, so caches/tokenized prompts
+  referencing old ids stay coherent).
+
+All mirrors are host numpy (mutation is a host-side, serving-loop-rate
+event); :meth:`merged` folds them into one device ``ELLGraph`` through a
+single jitted concat+mask (shapes fixed at ``(capacity, K + extra_deg)``,
+so every mutation epoch reuses the same trace).  Readers —
+``workset.build_workset``, dense BFS, every subgraph strategy — consume
+the merged view unchanged: it is just an ``ELLGraph`` whose ``num_nodes``
+is the capacity and whose sentinel is ``capacity``.
+
+Mutations are *functional* at the device level: a fold builds **new**
+arrays and never writes into ones a dispatched retrieval may still be
+reading, so an in-flight async retrieval always completes against the
+snapshot it was launched on (the race-freedom contract
+``RAGServeEngine.apply_mutations`` relies on).
+
+Compaction is not done here — :class:`repro.core.mutation.MutableGraphStore`
+rebuilds a canonical base from :meth:`live_edge_list` so the result is
+bitwise identical to a from-scratch build on the merged corpus.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.ell import ELLGraph
+
+
+class SlackOverflow(RuntimeError):
+    """A per-row append buffer is full — compact to fold slack into base."""
+
+
+class CapacityOverflow(RuntimeError):
+    """No free node rows left — compact with a larger capacity."""
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def _fold_merged(base_nbr, base_live, extra_nbr, extra_mask, tomb,
+                 *, capacity: int):
+    """Concat base + slack slots and mask kills/tombstones (one dispatch)."""
+    nbr = jnp.concatenate([base_nbr, extra_nbr], axis=1)
+    mask = jnp.concatenate([base_live, extra_mask], axis=1)
+    # sentinel id == capacity: give the tombstone gather a neutral last row
+    tomb_ext = jnp.concatenate([tomb, jnp.zeros((1,), bool)])
+    mask = mask & ~tomb_ext[jnp.minimum(nbr, capacity)]  # edges INTO dead
+    mask = mask & ~tomb[:, None]  # rows OF dead
+    nbr = jnp.where(mask, nbr, capacity)
+    return nbr, mask
+
+
+class DeltaGraph:
+    """Mutable graph = frozen base ELL + slack/kill/tombstone overlays.
+
+    ``capacity`` rows are pre-allocated; logical node ids are
+    ``0 .. n_nodes-1`` and grow by :meth:`add_node` (never reused).  The
+    device-facing sentinel is ``capacity`` throughout.
+    """
+
+    def __init__(self, base_nbr: np.ndarray, base_mask: np.ndarray,
+                 n_nodes: int, capacity: int, extra_deg: int = 16):
+        n, k = base_mask.shape
+        if n > capacity:
+            raise ValueError(f"base has {n} rows > capacity {capacity}")
+        if n_nodes < n:
+            raise ValueError("n_nodes must cover every base row")
+        self.capacity = int(capacity)
+        self.extra_deg = int(extra_deg)
+        self.n_nodes = int(n_nodes)
+        self.base_deg = int(k)
+        # base slots, remapped to the capacity sentinel and capacity rows
+        self.h_base_nbr = np.full((capacity, k), capacity, dtype=np.int32)
+        self.h_base_nbr[:n][base_mask] = base_nbr[base_mask]
+        self.h_base_mask = np.zeros((capacity, k), dtype=bool)
+        self.h_base_mask[:n] = base_mask
+        self.h_kill = np.zeros((capacity, k), dtype=bool)
+        self.h_extra = np.full((capacity, extra_deg), capacity, dtype=np.int32)
+        self.h_extra_cnt = np.zeros(capacity, dtype=np.int32)
+        self.tomb = np.zeros(capacity, dtype=bool)
+        self._merged = None  # cached device fold
+
+    # ---- mutation ops (host mirrors; device fold is rebuilt lazily) -----
+    def _check_id(self, u: int) -> None:
+        if not (0 <= u < self.n_nodes):
+            raise ValueError(f"node id {u} out of range [0, {self.n_nodes})")
+        if self.tomb[u]:
+            raise ValueError(f"node id {u} is tombstoned")
+
+    def add_node(self) -> int:
+        if self.n_nodes >= self.capacity:
+            raise CapacityOverflow(
+                f"capacity {self.capacity} exhausted; compact with headroom"
+            )
+        u = self.n_nodes
+        self.n_nodes += 1
+        self._merged = None
+        return u
+
+    def add_edge(self, u: int, v: int) -> bool:
+        """Add directed edge u->v.  Returns False if it already exists."""
+        self._check_id(u)
+        self._check_id(v)
+        row_live = self.h_base_mask[u] & ~self.h_kill[u]
+        if np.any(row_live & (self.h_base_nbr[u] == v)):
+            return False
+        # resurrect a killed base slot before consuming slack
+        killed = self.h_base_mask[u] & self.h_kill[u] & (self.h_base_nbr[u] == v)
+        if np.any(killed):
+            self.h_kill[u, int(np.argmax(killed))] = False
+            self._merged = None
+            return True
+        c = int(self.h_extra_cnt[u])
+        if np.any(self.h_extra[u, :c] == v):
+            return False
+        if c >= self.extra_deg:
+            raise SlackOverflow(
+                f"node {u}: {self.extra_deg} slack slots full; compact"
+            )
+        self.h_extra[u, c] = v
+        self.h_extra_cnt[u] = c + 1
+        self._merged = None
+        return True
+
+    def del_edge(self, u: int, v: int) -> bool:
+        """Delete directed edge u->v.  Returns False if absent."""
+        self._check_id(u)
+        base = self.h_base_mask[u] & ~self.h_kill[u] & (self.h_base_nbr[u] == v)
+        if np.any(base):
+            self.h_kill[u, int(np.argmax(base))] = True
+            self._merged = None
+            return True
+        c = int(self.h_extra_cnt[u])
+        hit = np.flatnonzero(self.h_extra[u, :c] == v)
+        if hit.size:
+            i = int(hit[0])  # shift left: keeps insertion order deterministic
+            self.h_extra[u, i:c - 1] = self.h_extra[u, i + 1:c]
+            self.h_extra[u, c - 1] = self.capacity
+            self.h_extra_cnt[u] = c - 1
+            self._merged = None
+            return True
+        return False
+
+    def del_node(self, u: int) -> None:
+        self._check_id(u)
+        self.tomb[u] = True
+        self._merged = None
+
+    # ---- host views -----------------------------------------------------
+    def neighbors_live(self, u: int) -> np.ndarray:
+        """Live out-neighbors of ``u`` (tombstoned targets excluded)."""
+        row_live = self.h_base_mask[u] & ~self.h_kill[u]
+        c = int(self.h_extra_cnt[u])
+        nbrs = np.concatenate(
+            [self.h_base_nbr[u][row_live], self.h_extra[u, :c]]
+        )
+        return nbrs[~self.tomb[nbrs]]
+
+    def live_edge_list(self) -> tuple[np.ndarray, np.ndarray]:
+        """All surviving directed edges among non-tombstoned nodes."""
+        live = self.h_base_mask & ~self.h_kill  # (cap, K)
+        extra_mask = (
+            np.arange(self.extra_deg)[None, :] < self.h_extra_cnt[:, None]
+        )
+        nbr = np.concatenate([self.h_base_nbr, self.h_extra], axis=1)
+        mask = np.concatenate([live, extra_mask], axis=1)
+        mask &= ~self.tomb[:, None]
+        safe = np.minimum(nbr, self.capacity - 1)
+        mask &= ~self.tomb[safe]
+        src, slot = np.nonzero(mask)
+        return src.astype(np.int64), nbr[src, slot].astype(np.int64)
+
+    def merged_host(self) -> tuple[np.ndarray, np.ndarray]:
+        """Numpy oracle of the merged view (tests compare vs. device fold)."""
+        live = self.h_base_mask & ~self.h_kill
+        extra_mask = (
+            np.arange(self.extra_deg)[None, :] < self.h_extra_cnt[:, None]
+        )
+        nbr = np.concatenate([self.h_base_nbr, self.h_extra], axis=1)
+        mask = np.concatenate([live, extra_mask], axis=1)
+        tomb_ext = np.concatenate([self.tomb, [False]])
+        mask = mask & ~tomb_ext[np.minimum(nbr, self.capacity)]
+        mask = mask & ~self.tomb[:, None]
+        nbr = np.where(mask, nbr, self.capacity).astype(np.int32)
+        return nbr, mask
+
+    # ---- device view ----------------------------------------------------
+    def merged(self) -> ELLGraph:
+        """Device merged view; cached until the next mutation.
+
+        The fold allocates fresh device arrays, so ELLGraph snapshots
+        handed out earlier stay valid for still-running dispatches.
+        """
+        if self._merged is None:
+            live = self.h_base_mask & ~self.h_kill
+            extra_mask = (
+                np.arange(self.extra_deg)[None, :] < self.h_extra_cnt[:, None]
+            )
+            nbr, mask = _fold_merged(
+                jnp.asarray(self.h_base_nbr), jnp.asarray(live),
+                jnp.asarray(self.h_extra), jnp.asarray(extra_mask),
+                jnp.asarray(self.tomb), capacity=self.capacity,
+            )
+            self._merged = ELLGraph(
+                nbr=nbr, nbr_mask=mask, num_nodes=self.capacity,
+                node_feat=None,
+            )
+        return self._merged

@@ -38,7 +38,7 @@ from repro import configs as C
 from repro.models.transformer import model as tm
 from repro.serving import (
     FaultyReplica, FaultyRetrieval, RAGRequest, RAGServeEngine, ReplicaRouter,
-    Request, RetrievalCache, ServeEngine,
+    Request, RetrievalCache, ServeEngine, ServingConfig,
 )
 
 
@@ -106,11 +106,22 @@ def _serve_rag(cfg, args) -> None:
                           index_shards=args.shards,
                           retrieval_mode=args.retrieval,
                           workset_cap=args.workset_cap)
-    index = index_from_config(emb, pcfg)
-    pipe = RGLPipeline(
-        graph=ell, index=index, node_emb=emb, tokenizer=tok,
-        node_text=g.node_text, config=pcfg,
-    )
+    store = None
+    if args.mutate_rate > 0:
+        from repro.core import MutableGraphStore
+        if args.index not in MutableGraphStore.MUTABLE_INDEX_KINDS:
+            raise SystemExit(
+                f"--mutate-rate needs --index in "
+                f"{MutableGraphStore.MUTABLE_INDEX_KINDS}, got {args.index!r}"
+            )
+        store = MutableGraphStore.build(g, index_kind=args.index)
+        pipe = store.make_pipeline(tokenizer=tok, config=pcfg)
+    else:
+        index = index_from_config(emb, pcfg)
+        pipe = RGLPipeline(
+            graph=ell, index=index, node_emb=emb, tokenizer=tok,
+            node_text=g.node_text, config=pcfg,
+        )
     if args.fault_rate > 0:
         # fault-injection demo mode: a seeded fraction of retrieval rows
         # raise / stall / corrupt, exercising the retry + degradation path
@@ -120,28 +131,35 @@ def _serve_rag(cfg, args) -> None:
     # the linearized graph prompt (<= tokenizer max_len) plus generated
     # tokens must fit the arena; sliding_window only bounds attention reach
     cache_len = max(cfg.sliding_window or 0, 96 + args.max_new + 1)
-    engine_kw = dict(slots=args.slots, cache_len=cache_len,
-                     cache_policy=args.cache_policy,
-                     cache_ttl=args.cache_ttl,
-                     prefetch=args.prefetch,
-                     prefetch_depth=args.prefetch_depth,
-                     admission=args.admission,
-                     spec_decode=args.spec_decode,
-                     draft_window=args.draft_window,
-                     paged_kv=args.paged_kv,
-                     kv_block_size=args.kv_block,
-                     kv_pool_blocks=args.pool_blocks,
-                     prefix_share=args.prefix_share,
-                     retrieval_timeout_s=args.retrieval_timeout,
-                     max_retries=args.retries,
-                     retry_backoff_s=args.retry_backoff,
-                     degraded_mode=args.degraded)
+    # one ServingConfig carries every CLI knob (CLI flag > RGL_* env >
+    # default — the same precedence rule as the engine's kwargs)
+    serve_cfg = ServingConfig.resolve(
+        None,
+        slots=args.slots, cache_len=cache_len,
+        cache_policy=args.cache_policy,
+        cache_ttl=args.cache_ttl,
+        prefetch=args.prefetch,
+        prefetch_depth=args.prefetch_depth,
+        admission=args.admission,
+        spec_decode=args.spec_decode,
+        draft_window=args.draft_window,
+        paged_kv=args.paged_kv,
+        kv_block_size=args.kv_block,
+        kv_pool_blocks=args.pool_blocks,
+        prefix_share=args.prefix_share,
+        retrieval_timeout_s=args.retrieval_timeout,
+        max_retries=args.retries,
+        retry_backoff_s=args.retry_backoff,
+        degraded_mode=args.degraded,
+        compact_every=args.compact_every,
+    )
     if args.replicas > 1:
-        return _serve_rag_fleet(pipe, g, emb, params, cfg, engine_kw, args)
+        return _serve_rag_fleet(pipe, g, emb, params, cfg, serve_cfg, args)
     eng = RAGServeEngine(pipe, params, cfg,
+                         config=serve_cfg,
                          max_pending=args.max_pending,
                          shed_policy=args.shed_policy,
-                         default_deadline_s=args.deadline, **engine_kw)
+                         default_deadline_s=args.deadline)
     rng = np.random.default_rng(0)
     q_ids = rng.choice(args.nodes, size=args.requests, replace=True)
     emb_np = np.asarray(emb)
@@ -152,9 +170,13 @@ def _serve_rag(cfg, args) -> None:
             query_text=" ".join(g.node_text[qi].split()[:4]),
             max_new_tokens=args.max_new,
         ))
-    # drain() never raises: under fault injection (or tight deadlines) the
-    # stragglers are aborted and reported instead of crashing the launcher
-    done = eng.drain()
+    if store is not None:
+        done = _drain_with_mutations(eng, store, args)
+    else:
+        # drain() never raises: under fault injection (or tight deadlines)
+        # the stragglers are aborted and reported instead of crashing the
+        # launcher
+        done = eng.drain()
     dt = time.time() - t0
     ok = [r for r in done if r.done and not r.failed]
     toks = sum(len(r.out_tokens) for r in ok)
@@ -176,17 +198,62 @@ def _serve_rag(cfg, args) -> None:
               f"({s['overlap_steps']} decode steps / "
               f"{s['overlap_tokens']} accepted tokens), "
               f"hidden_frac={s['hidden_frac']:.2f}")
+    if s.get("mutation_batches"):
+        print(f"  mutation: {s['mutation_batches']} batches "
+              f"(epoch {s['mutation_epoch']}, "
+              f"{s['mutation_compactions']} compactions, "
+              f"{s['mutation_invalidated']} cache entries invalidated, "
+              f"{s['stale_rejects']} stale puts rejected)")
     _print_decode_stats(s)
 
 
-def _serve_rag_fleet(pipe, g, emb, params, cfg, engine_kw, args) -> None:
+def _drain_with_mutations(eng, store, args, max_steps: int = 10_000) -> list:
+    """Serve to completion while a seeded writer mutates the live corpus:
+    each engine step, with probability ``--mutate-rate``, one mutation batch
+    (an edge insert, an edge delete, or a node add) lands between steps via
+    ``apply_mutations`` — the read/write-mix the online-mutation tier
+    exists for."""
+    from repro.core import MutationBatch
+
+    rng = np.random.default_rng(args.fault_seed + 1)
+    done = []
+    for _ in range(max_steps):
+        done.extend(eng.step())
+        if eng._drained():
+            return done
+        if rng.random() >= args.mutate_rate:
+            continue
+        kind = rng.random()
+        n = store.n_nodes
+        if kind < 0.45:  # insert an edge
+            batch = MutationBatch(add_edges=np.array(
+                [[rng.integers(0, n), rng.integers(0, n)]]))
+        elif kind < 0.9:  # delete an edge (no-op if it does not exist)
+            batch = MutationBatch(del_edges=np.array(
+                [[rng.integers(0, n), rng.integers(0, n)]]))
+        else:  # add a node wired to two random anchors
+            feat = rng.normal(size=(1, store.h_feat.shape[1] if store.active
+                                    else store.node_emb.shape[1]))
+            batch = MutationBatch(
+                add_node_feat=feat.astype(np.float32),
+                add_node_text=[f"live node {n}"],
+                add_edges=np.array([[n, rng.integers(0, n)],
+                                    [n, rng.integers(0, n)]]),
+            )
+        eng.apply_mutations(batch)
+    done.extend(eng.abort(reason=f"drain gave up after {max_steps} steps"))
+    return done
+
+
+def _serve_rag_fleet(pipe, g, emb, params, cfg, serve_cfg, args) -> None:
     # shed/deadline knobs move to the router's front door: the router pins
     # the absolute deadline at submit and sheds on queue overflow, so the
     # per-replica engines run unbounded underneath it
     cache = RetrievalCache(capacity=256 * args.replicas,
                            policy=args.cache_policy, ttl=args.cache_ttl)
     engines = [
-        RAGServeEngine(pipe, params, cfg, retrieval_cache=cache, **engine_kw)
+        RAGServeEngine(pipe, params, cfg, retrieval_cache=cache,
+                       config=serve_cfg)
         for _ in range(args.replicas)
     ]
     if args.crash_replica is not None:
@@ -368,6 +435,16 @@ def main():
                     help="router steps an open circuit waits before "
                          "half-open probing (also the crashed-replica "
                          "revival probe interval)")
+    ap.add_argument("--mutate-rate", type=float, default=0.0,
+                    help="online mutation demo: per-step probability that "
+                         "one mutation batch (edge insert/delete or node "
+                         "add) lands between decode steps while serving "
+                         "(needs --rag and a mutable --index; 0 = frozen "
+                         "corpus)")
+    ap.add_argument("--compact-every", type=int, default=None,
+                    help="fold the mutation delta into a fresh base every "
+                         "N applied batches (default honors "
+                         "RGL_COMPACT_EVERY, 0 = manual)")
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="inject seeded retrieval faults on this fraction "
                          "of query rows (demo/bench mode; 0 = off)")

@@ -1,8 +1,10 @@
+from repro.serving.config import ServingConfig
 from repro.serving.engine import ServeEngine, Request
 from repro.serving.cache import RetrievalCache, CachedRetrieval
 from repro.serving.prefetch import AdmissionPrefetcher, PrefetchWave
 from repro.serving.rag_engine import RAGServeEngine, RAGRequest
 from repro.serving.router import ReplicaRouter
+from repro.serving.stats import flatten_stats
 from repro.serving.simulate import (
     DelayedRetrieval,
     FaultyReplica,
@@ -13,6 +15,7 @@ from repro.serving.simulate import (
 )
 
 __all__ = [
+    "ServingConfig", "flatten_stats",
     "ServeEngine", "Request",
     "RetrievalCache", "CachedRetrieval",
     "AdmissionPrefetcher", "PrefetchWave",

@@ -38,6 +38,16 @@ owned by none of its own waves can still defer — single-flight semantics
 for the whole replica fleet, one dispatch per unique query no matter which
 replica's request arrives first (see
 :class:`repro.serving.router.ReplicaRouter`).
+
+When the corpus mutates under serving (:mod:`repro.core.mutation`), the
+cache is **versioned**: every entry records the mutation ``epoch`` it was
+retrieved against plus its ``region`` (the set of node-id buckets its
+subgraph + seeds touch), and :meth:`RetrievalCache.invalidate_regions`
+drops only the entries whose region a mutation touched — releasing any
+prefix-sharing KV pins they hold — while entries over unrelated regions
+survive the epoch bump.  ``put`` refuses results collected against a
+superseded region (an in-flight wave that raced a mutation), so staleness
+for touched regions is bounded by a single epoch.
 """
 from __future__ import annotations
 
@@ -69,6 +79,11 @@ class CachedRetrieval:
     mask: np.ndarray  # (M,) bool
     dist: np.ndarray  # (M,) int32 hop distances
     seeds: np.ndarray  # (S,) int32 seed node ids
+    # graph-mutation versioning (see RetrievalCache.invalidate_regions):
+    # the mutation epoch this retrieval ran against, and the set of
+    # node-id buckets its subgraph + seeds touch (computed by put()).
+    epoch: int = 0
+    region: frozenset | None = None
     # prefilled-KV pin (engine-owned; None/defaults when unpinned)
     kv_blocks: np.ndarray | None = None  # (nblk,) int32 pool block ids
     kv_len: int = 0  # prompt tokens the pinned blocks cover
@@ -109,14 +124,23 @@ class RetrievalCache:
         *,
         policy: str = "lru",
         ttl: float | None = None,
+        region_bucket: int = 32,
+        mutation_flush: str = "region",
         now_fn=time.monotonic,
     ):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        if mutation_flush not in ("region", "all"):
+            raise ValueError(
+                f"mutation_flush must be 'region' or 'all', got "
+                f"{mutation_flush!r}"
+            )
         self.capacity = capacity
         self.quant_eps = quant_eps
         self.policy = policy
         self.ttl = ttl
+        self.region_bucket = max(1, int(region_bucket))
+        self.mutation_flush = mutation_flush
         self._now = now_fn
         self._data: OrderedDict[bytes, _Slot] = OrderedDict()  # recency order
         # dispatched-but-uncollected keys -> owner wave's entries_by_key dict
@@ -129,6 +153,14 @@ class RetrievalCache:
         self.stale_hits = 0  # peek_stale found a resident (possibly
         #                      TTL-expired) entry to degrade onto
         self.stale_misses = 0  # peek_stale found nothing resident
+        # graph-mutation versioning: the newest epoch a mutation has
+        # reached, and a bounded log of (epoch, touched buckets) so put()
+        # can reject results computed against a superseded region.
+        self.graph_epoch = 0
+        self._touched_log: list[tuple[int, frozenset]] = []
+        self._touched_log_max = 256
+        self.invalidated = 0  # entries dropped by invalidate_regions
+        self.stale_rejects = 0  # put() refused a superseded-region entry
 
     def __len__(self) -> int:
         return len(self._data)
@@ -243,8 +275,67 @@ class RetrievalCache:
         self._release_kv(self._data.pop(victim).entry)
         self.evictions += 1
 
+    # -- graph-mutation versioning --------------------------------------------
+    def _region_of(self, entry: CachedRetrieval) -> frozenset:
+        """Node-id buckets an entry's subgraph + seeds touch."""
+        nodes = np.asarray(entry.nodes)[np.asarray(entry.mask, bool)]
+        ids = np.concatenate([nodes.ravel(), np.asarray(entry.seeds).ravel()])
+        return frozenset((ids.astype(np.int64) // self.region_bucket).tolist())
+
+    def _conflicts_since(self, epoch: int, region: frozenset | None) -> bool:
+        """Did any mutation after ``epoch`` touch ``region``?  Conservative:
+        an epoch older than the bounded log (or an unknown region) counts
+        as a conflict."""
+        if self._touched_log and epoch < self._touched_log[0][0] - 1:
+            return True
+        for e, touched in self._touched_log:
+            if e <= epoch:
+                continue
+            if region is None or (region & touched):
+                return True
+        return False
+
+    def invalidate_regions(self, touched_nodes, epoch: int) -> int:
+        """A mutation reached ``epoch`` after touching ``touched_nodes``:
+        drop every entry whose subgraph region intersects the touched
+        buckets (releasing any prefilled-KV pin it holds) so no future
+        lookup — including degraded-mode ``peek_stale`` — can serve a
+        result the mutation superseded.  Entries in unrelated regions
+        survive; ``mutation_flush="all"`` is the strict mode that drops
+        everything.  Returns the number of entries invalidated.
+
+        Mutations that only *add* nodes/edges near a cached subgraph also
+        land in the touched set (endpoints count), so a cached result that
+        *should* now include a new neighbor is invalidated too — staleness
+        is bounded by one epoch for touched regions.
+        """
+        ids = np.asarray(touched_nodes, np.int64).ravel()
+        buckets = frozenset((ids // self.region_bucket).tolist())
+        self.graph_epoch = max(self.graph_epoch, int(epoch))
+        self._touched_log.append((int(epoch), buckets))
+        del self._touched_log[: -self._touched_log_max]
+        victims = []
+        for k, slot in self._data.items():
+            region = slot.entry.region
+            if self.mutation_flush == "all" or region is None \
+                    or (region & buckets):
+                victims.append(k)
+        for k in victims:
+            self._release_kv(self._data.pop(k).entry)
+        self.invalidated += len(victims)
+        return len(victims)
+
     def put(self, query_emb, entry: CachedRetrieval) -> None:
         if self.capacity <= 0:
+            return
+        if entry.region is None:
+            entry.region = self._region_of(entry)
+        if entry.epoch < self.graph_epoch and \
+                self._conflicts_since(entry.epoch, entry.region):
+            # collected after a mutation superseded its region (e.g. an
+            # in-flight wave launched pre-mutation): still served to its
+            # requester, never cached
+            self.stale_rejects += 1
             return
         now = self._now()
         k = self.key(query_emb)
@@ -344,4 +435,12 @@ class RetrievalCache:
             "kv_pinned_entries": self.kv_pinned_entries(),
             "inflight": len(self._inflight),
             "hit_rate": self.hits / total if total else 0.0,
+            "graph_epoch": self.graph_epoch,
+            "invalidated": self.invalidated,
+            "stale_rejects": self.stale_rejects,
         }
+
+    def stats_ns(self) -> dict:
+        """Namespaced stats (unified serving schema): this cache's counters
+        under ``cache.*`` — see :mod:`repro.serving.stats`."""
+        return {"cache": self.stats()}

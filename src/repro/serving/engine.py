@@ -1082,6 +1082,11 @@ class ServeEngine:
             )
         return stats
 
+    def stats_ns(self) -> dict:
+        """Namespaced stats (unified serving schema): the decode arena's
+        counters under ``decode.*`` — see :mod:`repro.serving.stats`."""
+        return {"decode": self.decode_stats()}
+
     def run_to_completion(self, max_steps: int = 10_000) -> list:
         """Step until every request drains.  Raises if ``max_steps`` elapse
         with work still queued or live, instead of silently returning a

@@ -108,6 +108,7 @@ class PrefetchWave:
     deferred: list  # (request idx, key, owner wave's entries_by_key dict)
     sub: object = None  # Subgraph of device arrays (lazy) when misses exist
     seeds: object = None
+    epoch: int = 0  # graph epoch the retrieval was launched against
     launched_at: float = 0.0  # clock at dispatch return
     launch_step: int = 0  # engine step counter at launch
     launch_tokens: int = 0  # engine emitted-token counter at launch
@@ -159,9 +160,6 @@ class AdmissionPrefetcher:
         self.retry_backoff_s = retry_backoff_s
         self._now = now_fn
         self._sleep = sleep_fn
-        # node-id validation bound for corrupt-result detection; None skips
-        emb = getattr(pipeline, "node_emb", None)
-        self._n_nodes = int(emb.shape[0]) if emb is not None else None
         self._waves: deque[PrefetchWave] = deque()
         # telemetry
         self.waves = 0  # async-collected waves (prefetch schedule only)
@@ -175,6 +173,17 @@ class AdmissionPrefetcher:
         self.retries = 0  # size-1 relaunches of failed miss-groups
         self.timeouts = 0  # waits that hit retrieval_timeout_s
         self.failures = 0  # groups that exhausted retries (ladder-bound)
+
+    @property
+    def _n_nodes(self) -> Optional[int]:
+        """Node-id validation bound for corrupt-result detection; ``None``
+        skips the check.  Read per use (not cached at construction) so the
+        bound tracks the live graph as online mutations add nodes."""
+        n = getattr(self.pipeline, "n_valid_nodes", None)
+        if n is not None:
+            return int(n)
+        emb = getattr(self.pipeline, "node_emb", None)
+        return int(emb.shape[0]) if emb is not None else None
 
     @property
     def in_flight(self) -> int:
@@ -261,9 +270,10 @@ class AdmissionPrefetcher:
             # host sync, so the scan/BFS/filter pipeline runs concurrently
             # with the decode steps the engine issues after this returns
             try:
-                wave.sub, wave.seeds, n_valid = self.pipeline.retrieve_many(
-                    qe, batch_size=self.wave_size
-                )
+                res = self.pipeline.retrieve_many(qe, batch_size=self.wave_size)
+                wave.sub, wave.seeds = res.sub, res.seeds
+                wave.epoch = res.epoch
+                n_valid = res.n_valid
             except Exception as exc:  # data-plane fault: contained, retried
                 # at collect (per-group, size-1) — never marked in-flight,
                 # so a concurrent wave is free to dispatch the same key
@@ -378,9 +388,10 @@ class AdmissionPrefetcher:
         data-plane fault."""
         t0 = self._now()
         try:
-            sub, seeds, _ = self.pipeline.retrieve_many(
+            res = self.pipeline.retrieve_many(
                 np.asarray(emb, np.float32)[None], batch_size=1
             )
+            sub, seeds, epoch = res.sub, res.seeds, res.epoch
         except Exception as exc:
             return None, f"dispatch: {exc}"
         self.batches += 1
@@ -400,7 +411,7 @@ class AdmissionPrefetcher:
             return None, err
         return CachedRetrieval(
             nodes=nodes[0].copy(), mask=mask[0].copy(),
-            dist=dist[0].copy(), seeds=seeds_np[0].copy(),
+            dist=dist[0].copy(), seeds=seeds_np[0].copy(), epoch=epoch,
         ), None
 
     def _retry_group(self, emb, failed_attempts: int,
@@ -457,6 +468,7 @@ class AdmissionPrefetcher:
                         entries[k] = CachedRetrieval(
                             nodes=nodes[row].copy(), mask=mask[row].copy(),
                             dist=dist[row].copy(), seeds=seeds_np[row].copy(),
+                            epoch=wave.epoch,
                         )
         for k, idxs in groups:
             if k not in todo:
@@ -567,3 +579,8 @@ class AdmissionPrefetcher:
             "timeouts": self.timeouts,
             "retrieval_failures": self.failures,
         }
+
+    def stats_ns(self) -> dict:
+        """Namespaced stats (unified serving schema): the prefetcher's
+        counters under ``prefetch.*`` — see :mod:`repro.serving.stats`."""
+        return {"prefetch": self.stats()}

@@ -46,7 +46,6 @@ per dispatch) — see :mod:`repro.serving.engine`.
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from collections import deque
 from typing import Optional
@@ -56,67 +55,10 @@ import numpy as np
 from repro.core.pipeline import RGLPipeline
 from repro.models.transformer.config import TransformerConfig
 from repro.serving.cache import RetrievalCache
-from repro.serving.engine import Request, ServeEngine, env_flag
+from repro.serving.config import ServingConfig
+from repro.serving.engine import Request, ServeEngine
 from repro.serving.prefetch import AdmissionPrefetcher
-
-
-def _prefetch_default() -> bool:
-    """``RGL_PREFETCH`` env toggle, so the whole test/CI matrix can flip the
-    admission schedule without touching call sites.  Only explicit truthy
-    values enable it — anything else (including "no"/"disabled") stays sync."""
-    return env_flag("RGL_PREFETCH")
-
-
-def _env_float(name: str) -> Optional[float]:
-    """Optional float env knob; empty/unset means None, junk raises (a typo
-    must not silently disable a fault-tolerance deadline)."""
-    raw = os.environ.get(name, "").strip()
-    if not raw:
-        return None
-    try:
-        return float(raw)
-    except ValueError:
-        raise ValueError(f"{name}={raw!r} is not a number") from None
-
-
-def _env_int(name: str, default: int) -> int:
-    raw = os.environ.get(name, "").strip()
-    if not raw:
-        return default
-    try:
-        return int(raw)
-    except ValueError:
-        raise ValueError(f"{name}={raw!r} is not an integer") from None
-
-
-def _degraded_default() -> bool:
-    """``RGL_DEGRADED`` env toggle, default ON: degraded-mode admission is
-    part of the graceful ladder, so only an explicit falsy value disables
-    it (the opposite polarity of ``env_flag``)."""
-    return os.environ.get("RGL_DEGRADED", "").lower() not in (
-        "0", "false", "off", "no"
-    )
-
-
-def _shed_policy_default() -> str:
-    raw = os.environ.get("RGL_SHED_POLICY", "reject").lower()
-    if raw not in ("reject", "evict-oldest"):
-        raise ValueError(
-            f"RGL_SHED_POLICY={raw!r}: expected 'reject' or 'evict-oldest'"
-        )
-    return raw
-
-
-def _admission_default() -> str:
-    """``RGL_ADMISSION`` env default ("wave").  Invalid values raise — the
-    two schedules produce identical outputs, so a typo would otherwise run
-    silently in the wrong mode."""
-    raw = os.environ.get("RGL_ADMISSION", "wave").lower()
-    if raw not in ("wave", "continuous"):
-        raise ValueError(
-            f"RGL_ADMISSION={raw!r}: expected 'wave' or 'continuous'"
-        )
-    return raw
+from repro.serving.stats import flatten_stats
 
 
 @dataclasses.dataclass
@@ -213,13 +155,14 @@ class RAGServeEngine:
         params,
         cfg: TransformerConfig,
         *,
-        slots: int = 8,
-        cache_len: int = 512,
+        config: Optional[ServingConfig] = None,
+        slots: Optional[int] = None,
+        cache_len: Optional[int] = None,
         eos_id: Optional[int] = None,
         retrieval_cache: Optional[RetrievalCache] = None,
-        cache_capacity: int = 256,
-        quant_eps: float = 1e-3,
-        cache_policy: str = "lru",
+        cache_capacity: Optional[int] = None,
+        quant_eps: Optional[float] = None,
+        cache_policy: Optional[str] = None,
         cache_ttl: Optional[float] = None,
         prefetch: Optional[bool] = None,
         prefetch_depth: Optional[int] = None,
@@ -237,27 +180,55 @@ class RAGServeEngine:
         max_pending: Optional[int] = None,
         shed_policy: Optional[str] = None,
         default_deadline_s: Optional[float] = None,
+        compact_every: Optional[int] = None,
         now_fn=time.monotonic,
         sleep_fn=time.sleep,
     ):
         assert pipeline.tokenizer is not None, "pipeline needs a tokenizer"
         assert pipeline.node_text is not None, "pipeline needs node_text"
-        if pipeline.tokenizer.max_len >= cache_len:
+        # one resolution pass: explicit kwarg > config= > RGL_* env > default.
+        # The historical kwargs above are the deprecation shim — each one,
+        # when non-None, becomes an explicit override of the config.
+        self.config = resolved = ServingConfig.resolve(
+            config,
+            slots=slots, cache_len=cache_len, eos_id=eos_id,
+            cache_capacity=cache_capacity, quant_eps=quant_eps,
+            cache_policy=cache_policy, cache_ttl=cache_ttl,
+            prefetch=prefetch, prefetch_depth=prefetch_depth,
+            admission=admission, spec_decode=spec_decode,
+            draft_window=draft_window, paged_kv=paged_kv,
+            kv_block_size=kv_block_size, kv_pool_blocks=kv_pool_blocks,
+            prefix_share=prefix_share,
+            retrieval_timeout_s=retrieval_timeout_s, max_retries=max_retries,
+            retry_backoff_s=retry_backoff_s, degraded_mode=degraded_mode,
+            max_pending=max_pending, shed_policy=shed_policy,
+            default_deadline_s=default_deadline_s,
+            compact_every=compact_every,
+        )
+        if pipeline.tokenizer.max_len >= resolved.cache_len:
             raise ValueError(
                 f"tokenizer.max_len={pipeline.tokenizer.max_len} must be < "
-                f"cache_len={cache_len} so every prompt fits the KV arena"
+                f"cache_len={resolved.cache_len} so every prompt fits the KV "
+                f"arena"
             )
         self.pipeline = pipeline
-        self.slots = slots
+        self.slots = resolved.slots
         self.engine = ServeEngine(
-            params, cfg, slots=slots, cache_len=cache_len, eos_id=eos_id,
-            spec_decode=spec_decode, draft_window=draft_window,
-            paged_kv=paged_kv, block_size=kv_block_size,
-            pool_blocks=kv_pool_blocks, prefix_share=prefix_share,
+            params, cfg, slots=resolved.slots, cache_len=resolved.cache_len,
+            eos_id=resolved.eos_id,
+            spec_decode=resolved.spec_decode,
+            draft_window=resolved.draft_window,
+            paged_kv=resolved.paged_kv, block_size=resolved.kv_block_size,
+            pool_blocks=resolved.kv_pool_blocks,
+            prefix_share=resolved.prefix_share,
         )
         self.cache = retrieval_cache if retrieval_cache is not None else \
-            RetrievalCache(capacity=cache_capacity, quant_eps=quant_eps,
-                           policy=cache_policy, ttl=cache_ttl)
+            RetrievalCache(capacity=resolved.cache_capacity,
+                           quant_eps=resolved.quant_eps,
+                           policy=resolved.cache_policy,
+                           ttl=resolved.cache_ttl,
+                           region_bucket=resolved.region_bucket,
+                           mutation_flush=resolved.mutation_flush)
         if self.engine.prefix_share:
             # wire the engine's pin protocol to this cache: pins only attach
             # to entries still resident (a pin on an evicted entry would leak
@@ -267,59 +238,35 @@ class RAGServeEngine:
             self.engine.kv_pin_reclaim = (
                 lambda n: self.cache.reclaim_kv(n, owner=self.engine)
             )
-        self.prefetch = _prefetch_default() if prefetch is None else \
-            bool(prefetch)
-        self.admission = _admission_default() if admission is None else \
-            str(admission).lower()
-        if self.admission not in ("wave", "continuous"):
-            raise ValueError(
-                f"admission={self.admission!r}: expected 'wave' or "
-                f"'continuous'"
-            )
+        self.prefetch = resolved.prefetch
+        self.admission = resolved.admission
+        prefetch_depth = resolved.prefetch_depth
         if prefetch_depth is None:
             # continuous admission launches size-1 waves, so the in-flight
             # window must hold one wave per slot to keep every free slot's
             # retrieval overlapping; wave admission double-buffers (depth 1)
-            prefetch_depth = slots if self.admission == "continuous" else 1
+            prefetch_depth = resolved.slots \
+                if self.admission == "continuous" else 1
         # continuous launches always carry one request, so the retrieval
         # batch pads to 1 row instead of `slots` — per-row retrieval is
         # row-independent, so results stay bitwise identical while the
         # per-dispatch compute stops scaling with the unused padding
-        # -- fault-tolerance / overload-control knobs (env fallbacks) ---------
-        if retrieval_timeout_s is None:
-            retrieval_timeout_s = _env_float("RGL_RETRIEVAL_TIMEOUT")
-        if max_retries is None:
-            max_retries = _env_int("RGL_RETRIES", 0)
-        if retry_backoff_s is None:
-            retry_backoff_s = _env_float("RGL_RETRY_BACKOFF") or 0.0
-        self.degraded_mode = _degraded_default() if degraded_mode is None \
-            else bool(degraded_mode)
-        if max_pending is None:
-            max_pending = _env_int("RGL_MAX_PENDING", 0)
-        if max_pending < 0:
-            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
-        self.max_pending = max_pending  # 0 = unbounded
-        self.shed_policy = _shed_policy_default() if shed_policy is None \
-            else str(shed_policy).lower()
-        if self.shed_policy not in ("reject", "evict-oldest"):
-            raise ValueError(
-                f"shed_policy={self.shed_policy!r}: expected 'reject' or "
-                f"'evict-oldest'"
-            )
-        if default_deadline_s is None:
-            default_deadline_s = _env_float("RGL_DEADLINE")
-        self.default_deadline_s = default_deadline_s
+        self.degraded_mode = resolved.degraded_mode
+        self.max_pending = resolved.max_pending  # 0 = unbounded
+        self.shed_policy = resolved.shed_policy
+        self.default_deadline_s = resolved.default_deadline_s
+        self.compact_every = resolved.compact_every  # 0 = manual only
         self._now = now_fn
         # the prefetcher shares the engine's clock pair so retry backoff,
         # timeout deadlines, and readiness polling are fully clock-injectable
         # (chaos tests drive a virtual clock and never wall-sleep)
         self.prefetcher = AdmissionPrefetcher(
             pipeline, self.cache,
-            wave_size=1 if self.admission == "continuous" else slots,
+            wave_size=1 if self.admission == "continuous" else resolved.slots,
             depth=prefetch_depth,
-            retrieval_timeout_s=retrieval_timeout_s,
-            max_retries=max_retries,
-            retry_backoff_s=retry_backoff_s,
+            retrieval_timeout_s=resolved.retrieval_timeout_s,
+            max_retries=resolved.max_retries,
+            retry_backoff_s=resolved.retry_backoff_s,
             now_fn=now_fn,
             sleep_fn=sleep_fn,
         )
@@ -336,6 +283,9 @@ class RAGServeEngine:
         self.failed_count = 0
         self.degraded_count = 0
         self.stale_served = 0
+        # online-mutation counters (apply_mutations)
+        self.mutation_batches = 0
+        self.mutation_invalidated = 0
 
     # -- cache counters -------------------------------------------------------
     @property
@@ -701,6 +651,35 @@ class RAGServeEngine:
         done.extend(self.abort(reason=f"drain gave up after {max_steps} steps"))
         return done
 
+    # -- online mutation ------------------------------------------------------
+    def apply_mutations(self, batch) -> "object":
+        """Apply a :class:`repro.core.mutation.MutationBatch` to the live
+        graph/index tier between decode steps, then invalidate every cache
+        entry whose region the batch touched (releasing their prefix-share KV
+        pins).  Returns the store's ``MutationReport``.
+
+        Safe to interleave with :meth:`step`: the store builds *new* device
+        arrays and re-points the pipeline (functional snapshot), so a
+        retrieval wave already dispatched completes against its launch-time
+        snapshot; the cache's epoch put-gate then refuses to insert those
+        superseded results.  Call between steps, not from another thread.
+        """
+        store = getattr(self.pipeline, "mutation_store", None)
+        if store is None:
+            raise RuntimeError(
+                "apply_mutations needs a pipeline built on a "
+                "MutableGraphStore (see repro.core.mutation)"
+            )
+        report = store.apply(batch)
+        self.mutation_batches += 1
+        self.mutation_invalidated += self.cache.invalidate_regions(
+            report.touched, report.epoch
+        )
+        if self.compact_every and \
+                store.stats()["mutations_since_compact"] >= self.compact_every:
+            store.compact()
+        return report
+
     def health(self) -> dict:
         """Cheap health/load snapshot for a fronting router — raw counters
         only, no derived stats (``stats()`` is the full surface).  The fault
@@ -727,20 +706,35 @@ class RAGServeEngine:
             "queued": len(self.engine.queue),
         }
 
+    def stats_ns(self) -> dict:
+        """Namespaced stats: one sub-dict per serving layer (``cache``,
+        ``engine``, ``prefetch``, ``decode``, ``mutation`` — plus ``router``
+        when fronted by a :class:`~repro.serving.router.ReplicaRouter`).
+        :meth:`stats` is the flat compatibility view of exactly this tree
+        (see :func:`repro.serving.stats.flatten_stats`)."""
+        ns = {
+            "cache": self.cache.stats(),
+            "engine": {
+                "retrieval_batches": self.retrieval_batches,
+                "retrieved_queries": self.retrieved_queries,
+                "retrieval_seconds": self.retrieval_seconds,
+                "prefetch": self.prefetch,
+                "admission": self.admission,
+                "shed": self.shed_count,
+                "failed": self.failed_count,
+                "degraded": self.degraded_count,
+                "stale_served": self.stale_served,
+                "degraded_mode": self.degraded_mode,
+            },
+            "prefetch": self.prefetcher.stats(),
+            "decode": self.engine.decode_stats(),
+        }
+        store = getattr(self.pipeline, "mutation_store", None)
+        mut = dict(store.stats()) if store is not None else {}
+        mut["batches"] = self.mutation_batches
+        mut["invalidated"] = self.mutation_invalidated
+        ns["mutation"] = mut
+        return ns
+
     def stats(self) -> dict:
-        s = self.cache.stats()
-        s.update(
-            retrieval_batches=self.retrieval_batches,
-            retrieved_queries=self.retrieved_queries,
-            retrieval_seconds=self.retrieval_seconds,
-            prefetch=self.prefetch,
-            admission=self.admission,
-            shed=self.shed_count,
-            failed=self.failed_count,
-            degraded=self.degraded_count,
-            stale_served=self.stale_served,
-            degraded_mode=self.degraded_mode,
-            **self.prefetcher.stats(),
-            **self.engine.decode_stats(),
-        )
-        return s
+        return flatten_stats(self.stats_ns())

@@ -511,3 +511,8 @@ class ReplicaRouter:
             "failover": self.failover,
             "per_replica": per_replica,
         }
+
+    def stats_ns(self) -> dict:
+        """Namespaced stats (unified serving schema): the router's own
+        counters under ``router.*`` — see :mod:`repro.serving.stats`."""
+        return {"router": self.stats()}

@@ -168,9 +168,10 @@ class DelayedRetrieval:
         return getattr(self.inner, name)
 
     def retrieve_many(self, query_embs, *, batch_size=None, encoder=None):
-        sub, seeds, n_valid = self.inner.retrieve_many(
+        res = self.inner.retrieve_many(
             query_embs, batch_size=batch_size, encoder=encoder
         )
+        sub, seeds, n_valid = res.sub, res.seeds, res.n_valid
         self.dispatches += 1
         now = self.now_fn()
         if self.events is not None:
@@ -190,7 +191,11 @@ class DelayedRetrieval:
             mask=LazyHostArray(np.asarray(sub.mask), ready_at, **kw),
             dist=LazyHostArray(np.asarray(sub.dist), ready_at, **kw),
         )
-        return lazy, LazyHostArray(np.asarray(seeds), ready_at, **kw), n_valid
+        return dataclasses.replace(
+            res, sub=lazy,
+            seeds=LazyHostArray(np.asarray(seeds), ready_at, **kw),
+            n_valid=n_valid,
+        )
 
 
 class FaultyRetrieval:
@@ -308,9 +313,10 @@ class FaultyRetrieval:
                 f"injected dispatch fault ({len(dispatch_rows)} row(s))"
             )
 
-        sub, seeds, n_valid = self.inner.retrieve_many(
+        res = self.inner.retrieve_many(
             q, batch_size=batch_size, encoder=encoder
         )
+        sub, seeds, n_valid = res.sub, res.seeds, res.n_valid
         nodes = np.asarray(sub.nodes).copy()
         mask = np.asarray(sub.mask)
         dist = np.asarray(sub.dist)
@@ -348,7 +354,11 @@ class FaultyRetrieval:
             mask=LazyHostArray(mask, ready_at, exc=exc, **kw),
             dist=LazyHostArray(dist, ready_at, exc=exc, **kw),
         )
-        return lazy, LazyHostArray(seeds_np, ready_at, exc=exc, **kw), n_valid
+        return dataclasses.replace(
+            res, sub=lazy,
+            seeds=LazyHostArray(seeds_np, ready_at, exc=exc, **kw),
+            n_valid=n_valid,
+        )
 
 
 class FaultyReplica:

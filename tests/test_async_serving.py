@@ -266,7 +266,9 @@ def test_inflight_keys_released_on_retrieval_failure(stack):
             return getattr(self.inner, name)
 
         def retrieve_many(self, q, *, batch_size=None, encoder=None):
-            return BoomSub(), BoomArray(), int(q.shape[0])
+            from repro.core.pipeline import RetrievalResult
+            return RetrievalResult(sub=BoomSub(), seeds=BoomArray(),
+                                   n_valid=int(q.shape[0]))
 
     eng = RAGServeEngine(BoomPipe(pipe), params, cfg, slots=2,
                          cache_len=CACHE_LEN, prefetch=True)

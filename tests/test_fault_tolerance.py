@@ -225,7 +225,7 @@ def test_stuck_row_without_timeout_fails_loud_not_hung(stack, monkeypatch):
     r = eng.run_to_completion()[0]
     assert r.done and r.degraded
     with pytest.raises(RetrievalFault, match="stuck"):
-        np.asarray(boom.retrieve_many(np.asarray(g.node_feat[0]))[1])
+        np.asarray(boom.retrieve_many(np.asarray(g.node_feat[0])).seeds)
 
 
 # ------------------------------------------------- deadlines & overload ----
@@ -505,3 +505,81 @@ def test_chaos_soak_matrix(stack, prefetch, admission, paged):
         if qi not in bad_q:
             assert done[u].done and not done[u].failed
             assert not done[u].degraded and not done[u].stale
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("admission", ["wave", "continuous"])
+def test_chaos_soak_with_mutations(stack, admission):
+    """Mutation cell of the chaos soak: seeded retrieval faults AND seeded
+    graph mutations interleave with serving steps.  Invariants: step() and
+    apply_mutations() never raise, every request reaches exactly one
+    terminal state, no layer leaks, the cache epoch tracks the store, and
+    the post-soak compacted store is bitwise identical to a from-scratch
+    rebuild of its merged corpus."""
+    from repro.core import MutableGraphStore, MutationBatch
+    from repro.graph import CSRGraph
+
+    g, _, cfg, params = stack
+    store = MutableGraphStore.build(g, index_kind="brute")
+    pipe = store.make_pipeline(
+        tokenizer=GraphTokenizer(Vocab.build(g.node_text), max_len=64,
+                                 node_budget=6),
+        config=PipelineConfig(strategy="bfs", k_seeds=3, max_hops=2,
+                              max_nodes=16, filter_budget=8),
+    )
+    faulty = FaultyRetrieval(pipe, seed=23, fault_rate=0.25)
+    eng = RAGServeEngine(faulty, params, cfg, slots=SLOTS,
+                         cache_len=CACHE_LEN, prefetch=True,
+                         admission=admission, max_retries=1,
+                         retrieval_timeout_s=0.05, compact_every=6)
+    n = 14
+    for u in range(n):
+        eng.submit(_req(g, u % 7, uid=u, max_new=4))
+
+    rng = np.random.default_rng(29)
+    done, steps = {}, 0
+    while not eng._drained() and steps < 400:
+        for r in eng.step():
+            assert r.uid not in done  # exactly one terminal per request
+            done[r.uid] = r
+        steps += 1
+        if rng.random() < 0.5:  # ~10% write mix relative to decode steps
+            n_nodes = store.n_nodes
+            alive = np.flatnonzero(np.asarray(store.alive)[:n_nodes])
+            u, v = int(rng.choice(alive)), int(rng.choice(alive))
+            roll = rng.random()
+            if roll < 0.45:
+                batch = MutationBatch(add_edges=np.array([[u, v]]))
+            elif roll < 0.9:
+                batch = MutationBatch(del_edges=np.array([[u, v]]))
+            else:
+                batch = MutationBatch(
+                    add_node_feat=rng.normal(
+                        size=(1, g.node_feat.shape[1])).astype(np.float32),
+                    add_node_text=[f"chaos {n_nodes}"],
+                    add_edges=np.array([[n_nodes, u]]),
+                )
+            eng.apply_mutations(batch)
+
+    assert set(done) == set(range(n))
+    s = eng.stats()
+    n_done = sum(r.done and not r.failed for r in done.values())
+    assert n_done + s["failed"] + s["shed"] == n
+    assert n_done > 0
+    assert store.epoch >= 1 and s["mutation_batches"] == store.batches_applied
+    assert eng.cache.graph_epoch == store.epoch
+    _assert_clean(eng)
+
+    # the soaked store still compacts to rebuild-equivalent state
+    store.compact()
+    src, dst = store.delta.live_edge_list()
+    g2 = CSRGraph.from_edges(
+        src, dst, store.n_nodes,
+        node_feat=store.h_feat[:store.n_nodes].copy(),
+        node_text=list(store.node_text[:store.n_nodes]))
+    ref = MutableGraphStore.build(g2, index_kind="brute", alive=store.alive,
+                                  active=True)
+    np.testing.assert_array_equal(np.asarray(store.graph.nbr),
+                                  np.asarray(ref.graph.nbr))
+    np.testing.assert_array_equal(np.asarray(store.node_emb),
+                                  np.asarray(ref.node_emb))

@@ -29,12 +29,21 @@ def stack():
     emb = jnp.asarray(g.node_feat)
     vocab = Vocab.build(g.node_text)
     tok = GraphTokenizer(vocab, max_len=MAX_LEN, node_budget=8)
-    pipe = RGLPipeline(
-        graph=ell, index=BruteIndex.build(emb), node_emb=emb, tokenizer=tok,
-        node_text=g.node_text,
-        config=PipelineConfig(strategy="bfs", k_seeds=3, max_hops=2,
-                              max_nodes=16, filter_budget=8),
-    )
+    pcfg = PipelineConfig(strategy="bfs", k_seeds=3, max_hops=2,
+                          max_nodes=16, filter_budget=8)
+    from repro.serving.config import env_flag
+    if env_flag("RGL_MUTATION"):
+        # RGL_MUTATION CI cell: the whole serving matrix runs on a pipeline
+        # built through a pristine MutableGraphStore — zero-mutation serving
+        # must be bitwise identical to the frozen setup below
+        from repro.core import MutableGraphStore
+        store = MutableGraphStore.build(g, index_kind="brute")
+        pipe = store.make_pipeline(tokenizer=tok, config=pcfg)
+    else:
+        pipe = RGLPipeline(
+            graph=ell, index=BruteIndex.build(emb), node_emb=emb,
+            tokenizer=tok, node_text=g.node_text, config=pcfg,
+        )
     cfg = TransformerConfig(
         name="rag-t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
         d_head=16, d_ff=64, vocab=vocab.size, dtype="float32",
@@ -87,9 +96,12 @@ def test_retrieve_many_padding_is_inert(stack):
     """Padded rows in the fixed-shape serving batch never perturb real rows."""
     g, pipe, _, _ = stack
     qe = np.asarray(g.node_feat[:2], np.float32)
-    sub1, seeds1 = pipe.retrieve(jnp.asarray(qe))
-    sub8, seeds8, n_valid = pipe.retrieve_many(qe, batch_size=8)
+    res1 = pipe.retrieve(jnp.asarray(qe))
+    sub1, seeds1 = res1.sub, res1.seeds
+    res8 = pipe.retrieve_many(qe, batch_size=8)
+    sub8, seeds8, n_valid = res8.sub, res8.seeds, res8.n_valid
     assert n_valid == 2 and seeds8.shape[0] == 8
+    assert res8.epoch == pipe.epoch
     np.testing.assert_array_equal(np.asarray(seeds8)[:2], np.asarray(seeds1))
     np.testing.assert_array_equal(np.asarray(sub8.nodes)[:2],
                                   np.asarray(sub1.nodes))
@@ -100,7 +112,7 @@ def test_retrieve_many_padding_is_inert(stack):
 # ---------------------------------------------------- engine vs reference ----
 def _reference_tokens(g, pipe, cfg, params, qi):
     """Unbatched pipeline + offline greedy decode — the fused engine oracle."""
-    sub, _ = pipe.retrieve(jnp.asarray(g.node_feat[qi])[None])
+    sub = pipe.retrieve(jnp.asarray(g.node_feat[qi])[None]).sub
     texts = subgraph_texts(sub, g.node_text)[0]
     ids, mask = pipe.tokenizer.linearize(g.node_text[qi], texts)
     prompt = ids[mask]
