@@ -285,6 +285,8 @@ class MutableIVFIndex:
         width = self.h_lists.shape[1]
         for i, c in zip(ids, assign):
             cnt = int(self.h_counts[c])
+            if i in self.h_lists[c, :cnt]:
+                continue  # already indexed (e.g. by a compaction rebuild)
             if cnt >= width:
                 raise SlackOverflow(
                     f"IVF list {int(c)}: {width} slots full; compact"

@@ -84,8 +84,10 @@ class MutationBatch:
 
     @property
     def is_empty(self) -> bool:
-        return (self.n_added_nodes == 0 and not self.add_edges
-                and not self.del_edges and not self.del_nodes)
+        # len(), not truthiness: edge fields are commonly numpy arrays,
+        # whose bool() raises for more than one element.
+        return (self.n_added_nodes == 0 and len(self.add_edges) == 0
+                and len(self.del_edges) == 0 and len(self.del_nodes) == 0)
 
 
 @dataclasses.dataclass
@@ -361,6 +363,10 @@ class MutableGraphStore:
                     self.node_text.append(texts[i])
                 added.append(u)
                 touched.add(u)
+        # Any compaction from here on rebuilds the index over all alive
+        # ids, the just-added nodes included — _refresh_device must then
+        # skip the incremental add or the IVF lists hold them twice.
+        compactions_after_adds = self.compactions
 
         edges_added = edges_deleted = 0
         for u, v in batch.add_edges:
@@ -390,7 +396,8 @@ class MutableGraphStore:
         self.epoch += 1
         self.batches_applied += 1
         self.mutations_since_compact += 1
-        self._refresh_device(added)
+        already_indexed = self.compactions != compactions_after_adds
+        self._refresh_device([] if already_indexed else added)
         self._sync_pipelines()
         return MutationReport(
             epoch=self.epoch,

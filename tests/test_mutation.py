@@ -164,6 +164,55 @@ def test_incremental_ivf_add_and_delete_visibility():
     assert new_id not in np.asarray(idx)[0].tolist()
 
 
+def test_mid_apply_compaction_no_duplicate_ivf_entries():
+    # A batch that adds a node and then overflows edge slack forces an
+    # inline compaction *after* the node add; the rebuilt index already
+    # holds the new id, so the post-apply incremental add must not insert
+    # it a second time (it used to, yielding topk like [32, 32, ...]).
+    g = _graph(seed=6)
+    store = _store(g, index_kind="ivf", index_kw={"n_clusters": 6},
+                   extra_deg=1)
+    rng = np.random.default_rng(3)
+    feat = rng.normal(size=(1, D)).astype(np.float32)
+    edges = np.array([[N, v] for v in range(10)])
+    rep = store.apply(MutationBatch(add_node_feat=feat,
+                                    add_node_text=["fresh"],
+                                    add_edges=edges))
+    assert rep.compactions > 0  # the mid-apply scenario actually fired
+    new_id = rep.added_nodes[0]
+    idx = store.index
+    flat = np.concatenate([idx.h_lists[c, : idx.h_counts[c]]
+                           for c in range(idx.n_clusters)])
+    _, dup = np.unique(flat, return_counts=True)
+    assert dup.max() == 1  # every alive id indexed exactly once
+    _, top = idx.search(feat, 5)
+    top = np.asarray(top)[0].tolist()
+    assert top[0] == new_id
+    assert len(set(top)) == len(top)  # no duplicate results
+
+
+def test_incremental_ivf_add_is_idempotent():
+    g = _graph(seed=8)
+    store = _store(g, index_kind="ivf", index_kw={"n_clusters": 6})
+    rep = store.apply(MutationBatch(
+        add_node_feat=np.ones((1, D), np.float32), add_node_text=["x"]))
+    new_id = rep.added_nodes[0]
+    idx = store.index
+    before = (idx.h_lists.copy(), idx.h_counts.copy())
+    idx.add(np.array([new_id], np.int32))  # re-add of an indexed id
+    np.testing.assert_array_equal(idx.h_lists, before[0])
+    np.testing.assert_array_equal(idx.h_counts, before[1])
+
+
+def test_is_empty_handles_numpy_edge_arrays():
+    assert MutationBatch().is_empty
+    assert not MutationBatch(add_edges=np.array([[0, 1]])).is_empty
+    assert not MutationBatch(del_edges=np.array([[0, 1]])).is_empty
+    assert not MutationBatch(del_nodes=np.array([3])).is_empty
+    assert not MutationBatch(
+        add_node_feat=np.zeros((1, D), np.float32)).is_empty
+
+
 def test_slack_overflow_triggers_inline_compaction():
     g = _graph(seed=2)
     store = _store(g, extra_deg=2)
